@@ -1,0 +1,117 @@
+"""Shared benchmark substrate: a properly-trained LM on the synthetic
+Zipf–Markov corpus (the paper's PTB-Small stand-in — DESIGN §6), cached to
+``results/bench_cache`` so the five paper-table benchmarks reuse it.
+
+Scale (CPU-feasible, structure-preserving): vocab 8000, 2-layer LSTM d=128,
+2400 train steps. The quantity of interest — precision-vs-speedup orderings of
+the screening methods — is scale-robust; see EXPERIMENTS.md for the protocol
+argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import L2SConfig, TrainConfig, get_config
+from repro.core import collect_contexts
+from repro.data import ZipfMarkovCorpus, make_lm_batches
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw_init
+
+CACHE = os.environ.get("BENCH_CACHE", "results/bench_cache")
+VOCAB = 8000
+D_MODEL = 128
+TRAIN_STEPS = 2400
+N_CONTEXTS = 60_000
+
+
+def bench_config():
+    cfg = get_config("ptb-small-lstm")
+    return dataclasses.replace(cfg, vocab_size=VOCAB, d_model=D_MODEL,
+                               dtype="float32")
+
+
+def corpus():
+    return ZipfMarkovCorpus(VOCAB, branching=96, seed=0)
+
+
+def get_artifacts():
+    """Returns (cfg, model, params, W, b, H_train, y_train, H_test, y_test,
+    test_targets). Cached on disk after first build."""
+    os.makedirs(CACHE, exist_ok=True)
+    pkl = os.path.join(CACHE, "artifacts.pkl")
+    cfg = bench_config()
+    model = build_model(cfg)
+    if os.path.exists(pkl):
+        with open(pkl, "rb") as f:
+            blob = pickle.load(f)
+        params = jax.tree_util.tree_map(jnp.asarray, blob["params"])
+        return (cfg, model, params, blob["W"], blob["b"], blob["Htr"],
+                blob["ytr"], blob["Hte"], blob["yte"], blob["targets"])
+
+    print("[bench] training benchmark LM "
+          f"(vocab={VOCAB}, d={D_MODEL}, steps={TRAIN_STEPS}) ...")
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    tcfg = TrainConfig(lr=3e-3, total_steps=TRAIN_STEPS, warmup_steps=50,
+                       remat="none", loss_chunk=None)
+    step = jax.jit(make_train_step(model, tcfg))
+    opt = adamw_init(params)
+    c = corpus()
+    t0 = time.time()
+    for i, batch in enumerate(make_lm_batches(c, TRAIN_STEPS, 16, 64, seed=1)):
+        params, opt, metrics = step(
+            params, opt, {k: jnp.asarray(v) for k, v in batch.items()})
+        if (i + 1) % 100 == 0:
+            print(f"[bench]   step {i+1} loss {float(metrics['loss']):.3f} "
+                  f"({time.time()-t0:.0f}s)")
+    # harvest contexts + exact top-5 labels
+    batches = [jnp.asarray(b["tokens"])
+               for b in make_lm_batches(c, 80, 16, 64, seed=99)]
+    H, y = collect_contexts(model, params, batches, max_vectors=N_CONTEXTS)
+    # held-out targets for perplexity (the NEXT token at each position)
+    tgt_batches = [b for b in make_lm_batches(c, 8, 16, 64, seed=555)]
+    Hte_list, tgts = [], []
+    for b in tgt_batches:
+        h, _ = model.forward(params, {"tokens": jnp.asarray(b["tokens"])})
+        Hte_list.append(np.asarray(h.reshape(-1, D_MODEL), np.float32))
+        tgts.append(np.asarray(b["labels"].reshape(-1), np.int64))
+    W, bb = model.softmax_weights(params)
+    split = int(0.85 * len(H))
+    blob = {
+        "params": jax.tree_util.tree_map(np.asarray, params),
+        "W": np.asarray(W), "b": np.asarray(bb),
+        "Htr": H[:split], "ytr": y[:split],
+        "Hte": H[split:], "yte": y[split:],
+        "targets": (np.concatenate(Hte_list), np.concatenate(tgts)),
+    }
+    with open(pkl, "wb") as f:
+        pickle.dump(blob, f)
+    print(f"[bench] artifacts cached ({time.time()-t0:.0f}s total)")
+    params = jax.tree_util.tree_map(jnp.asarray, blob["params"])
+    return (cfg, model, params, blob["W"], blob["b"], blob["Htr"],
+            blob["ytr"], blob["Hte"], blob["yte"], blob["targets"])
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall seconds per call (blocks on jax outputs)."""
+    ts = []
+    for i in range(warmup + iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, (jnp.ndarray, tuple, list)) else None
+        ts.append(time.perf_counter() - t0)
+    ts = sorted(ts[warmup:])
+    return ts[len(ts) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Paper Table 4: end-to-end L2S vs the spherical-kmeans-only screen at the
+same budget — isolates the value of the Gumbel-trained clustering."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, get_artifacts, time_fn
+from repro.configs import L2SConfig
+from repro.core import fit_l2s, precision_at_k
+from repro.core.evaluate import (PerQueryScreen, avg_candidate_size,
+                                 exact_topk)
+from repro.core.train_l2s import kmeans_only_screen
+import time
+
+
+def run(k: int = 5):
+    cfg, model, params, W, b, Htr, ytr, Hte, yte, _ = get_artifacts()
+    Wd, bd = jnp.asarray(W), jnp.asarray(b)
+    Hq = Hte[:1536]
+    exact = np.asarray(exact_topk(Wd, bd, jnp.asarray(Hq), k))
+
+    # tight budgets — the discriminating regime (precision < 1)
+    for budget in (20, 60):
+        l2s_cfg = L2SConfig(num_clusters=100, budget=budget, outer_iters=3,
+                            sgd_steps=250)
+        for name, state in (
+            ("L2S", fit_l2s(Htr, ytr, cfg.vocab_size, l2s_cfg)),
+            ("kmeans-only", kmeans_only_screen(Htr, ytr, cfg.vocab_size,
+                                               l2s_cfg)),
+        ):
+            pq = PerQueryScreen(W, b, state.screen)
+            pred = np.stack([pq.topk(Hq[i], k) for i in range(len(Hq))])
+            p1 = precision_at_k(pred[:, :1], exact[:, :1])
+            p5 = precision_at_k(pred, exact)
+            t0 = time.perf_counter()
+            for i in range(400):
+                pq.topk(Hq[i], k)
+            us = (time.perf_counter() - t0) / 400 * 1e6
+            lbar = avg_candidate_size(state.screen, Hte)
+            csv_row(f"table4/{name}-B{budget}", us,
+                    f"p1={p1:.3f},p5={p5:.3f},lbar={lbar:.0f}")
+
+
+if __name__ == "__main__":
+    run()

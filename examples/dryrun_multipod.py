@@ -1,0 +1,28 @@
+"""Multi-pod dry-run example: lower + compile one (arch × shape) combination
+on the 512-chip production mesh and print the roofline terms.
+
+Run: PYTHONPATH=src python examples/dryrun_multipod.py [arch] [shape]
+(defaults: mixtral-8x7b decode_32k — MoE + sliding-window decode)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import lower_combo
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "mixtral-8x7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+
+cfg = get_config(arch)
+print(f"{arch} × {shape} on the 2×16×16 multi-pod mesh (512 chips) ...")
+mesh = make_production_mesh(multi_pod=True)
+rec = lower_combo(cfg, INPUT_SHAPES[shape], mesh)
+print(json.dumps(rec, indent=2))
+rl = rec["roofline"]
+print(f"\ndominant term: {rl['dominant']} "
+      f"(compute {rl['compute_s']:.3e}s | memory {rl['memory_s']:.3e}s | "
+      f"collective {rl['collective_s']:.3e}s per step per device)")

@@ -1,0 +1,39 @@
+"""Pallas kernel demo: the TPU-adapted screened softmax hot path
+(cluster_route → scalar-prefetch block gather-matmul → subset top-k),
+validated against the pure-jnp reference in interpret mode.
+
+Run: PYTHONPATH=src python examples/kernel_demo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.screening import ScreenParams, screened_topk
+from repro.kernels.ops import pack_head_blocks, screened_topk_tpu
+from repro.kernels.ref import cluster_route_ref
+from repro.kernels.route import cluster_route_pallas
+
+rng = np.random.default_rng(0)
+L, d, r, K, B = 16_384, 512, 64, 8, 32          # vocab, dim, clusters, blocks
+print(f"softmax head: vocab={L}, d={d} | screen: r={r}, {K} blocks/cluster")
+
+W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
+b = jnp.asarray(rng.standard_normal((L,)) * 0.1, jnp.float32)
+Wb, bb = pack_head_blocks(W, b)                  # (128, 128, 512) MXU tiles
+print(f"packed head: {Wb.shape} — {Wb.nbytes/1e6:.0f} MB in vocab blocks")
+
+v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+cand = jnp.asarray(rng.integers(0, Wb.shape[0], (r, K)), jnp.int32)
+h = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+
+ids, vals = screened_topk_tpu(Wb, bb, v, cand, h, k=5)     # kernels (interpret)
+route = cluster_route_pallas(h, v)
+assert bool(jnp.all(route == cluster_route_ref(h, v)))
+
+sp = ScreenParams(v=v, cand_idx=cand,
+                  cand_len=jnp.full((r,), K, jnp.int32), vocab_size=L,
+                  block=128)
+ids_ref, vals_ref = screened_topk(W, b, sp, h, 5)          # pure jnp
+assert bool(jnp.all(ids == ids_ref)), "kernel != reference"
+print("kernel path == jnp reference on all", B, "queries  ✓")
+print("per-query compute: full softmax", L * d, "MACs vs screened",
+      r * d + K * 128 * d, f"MACs  ({L * d / (r * d + K * 128 * d):.1f}x fewer)")

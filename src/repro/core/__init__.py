@@ -1,0 +1,16 @@
+"""L2S — Learning to Screen (the paper's contribution).
+
+Pipeline (paper Algorithm 1):
+  1. collect context vectors H and exact-softmax top-k label sets y
+  2. init cluster weights v by spherical k-means on H
+  3. alternate:  c-step — greedy knapsack candidate selection under budget B
+                 v-step — SGD on Eq.(8) through the Gumbel-ST relaxation
+  4. inference: z(h) = argmax_t v_t·h;  exact softmax over candidate set c_z
+"""
+from repro.core.gumbel import gumbel_softmax_st
+from repro.core.kmeans import spherical_kmeans, kmeans_assign
+from repro.core.knapsack import greedy_knapsack, candidate_stats
+from repro.core.screening import (ScreenParams, assign_clusters, screened_logits,
+                                  screened_topk, candidates_to_padded, make_screen_fn)
+from repro.core.train_l2s import L2SState, fit_l2s, collect_contexts
+from repro.core.evaluate import precision_at_k, speedup_model, avg_candidate_size

@@ -1,0 +1,26 @@
+"""Gumbel-softmax straight-through estimator (Jang et al. 2017), paper Eq.(4-5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_gumbel(key, shape, eps: float = 1e-10):
+    u = jax.random.uniform(key, shape, jnp.float32, minval=eps, maxval=1.0 - eps)
+    return -jnp.log(-jnp.log(u))
+
+
+def gumbel_softmax_st(key, logits, temperature: float = 1.0):
+    """Straight-through Gumbel softmax.
+
+    logits: (..., r) unnormalized log-probabilities log P(t|h) (paper Eq.(3)).
+    Returns (p_bar, p_soft): p_bar is one-hot in value with p_soft's gradient
+    (paper: p̄ = p + stop_grad(one_hot(argmax p) − p)); p_soft is Eq.(5).
+    """
+    g = sample_gumbel(key, logits.shape)
+    y = (logits.astype(jnp.float32) + g) / temperature
+    p_soft = jax.nn.softmax(y, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(p_soft, axis=-1), logits.shape[-1],
+                          dtype=p_soft.dtype)
+    p_bar = p_soft + jax.lax.stop_gradient(hard - p_soft)
+    return p_bar, p_soft

@@ -1,0 +1,38 @@
+"""Spherical k-means on context vectors — L2S initialization (Algorithm 1 l.3)
+and the Table-4 ablation baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _normalize(x, eps=1e-8):
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def spherical_kmeans(key, X, r: int, iters: int = 20):
+    """Cluster rows of X (N, d) by cosine similarity into r clusters.
+
+    Returns centers (r, d), unit rows. Runs fully jit-compiled.
+    """
+    N, d = X.shape
+    Xn = _normalize(X.astype(jnp.float32))
+    init_idx = jax.random.choice(key, N, (r,), replace=False)
+    centers = Xn[init_idx]
+
+    def step(centers, _):
+        sims = Xn @ centers.T                          # (N, r)
+        assign = jnp.argmax(sims, axis=-1)
+        onehot = jax.nn.one_hot(assign, r, dtype=jnp.float32)   # (N, r)
+        sums = onehot.T @ Xn                           # (r, d)
+        counts = jnp.sum(onehot, axis=0)[:, None]
+        # empty clusters keep their previous center
+        new = jnp.where(counts > 0, _normalize(sums), centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    return centers
+
+
+def kmeans_assign(centers, X):
+    return jnp.argmax(_normalize(X.astype(jnp.float32)) @ centers.T, axis=-1)

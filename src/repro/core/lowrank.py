@@ -1,0 +1,85 @@
+"""Perplexity with screened softmax (paper §7.3, following Shim et al.):
+
+for words inside the routed candidate set, exact logits; outside, the rank-ρ
+approximation W̃h. Probabilities are then computed over the combined logits —
+lets a top-k screening method evaluate full-distribution perplexity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.screening import ScreenParams, assign_clusters
+
+
+def build_lowrank(W: np.ndarray, rho: int):
+    U, S, Vt = np.linalg.svd(W, full_matrices=False)
+    return (U[:, :rho] * S[:rho]).astype(np.float32), Vt[:rho].astype(np.float32)
+
+
+def hybrid_logits(W, b, U, Vt, screen: ScreenParams, h: jnp.ndarray):
+    """(B, L) logits: exact inside candidates, low-rank outside."""
+    L, d = W.shape
+    approx = (h @ Vt.T) @ U.T + b                          # (B, L) low-rank
+    cluster = assign_clusters(screen.v, h)
+    items = screen.cand_idx[cluster]                       # (B, C_max)
+    n_items = -(-L // screen.block)
+    valid = items < n_items
+    if screen.block == 1:
+        safe = jnp.where(valid, items, 0)
+        exact = jnp.einsum("bcd,bd->bc", W[safe], h) + b[safe]
+        # scatter exact logits over the approx base
+        out = approx
+        bidx = jnp.arange(h.shape[0])[:, None]
+        out = out.at[bidx, safe].set(jnp.where(valid, exact, out[bidx, safe]))
+        return out
+    blk = screen.block
+    safe = jnp.where(valid, items, 0)
+    Lpad = n_items * blk
+    Wp = jnp.pad(W, ((0, Lpad - L), (0, 0))).reshape(n_items, blk, d)
+    bp = jnp.pad(b, (0, Lpad - L)).reshape(n_items, blk)
+    exact = jnp.einsum("bckd,bd->bck", Wp[safe], h) + bp[safe]
+    word = safe[..., None] * blk + jnp.arange(blk)[None, None, :]
+    word = jnp.minimum(word, L - 1).reshape(h.shape[0], -1)
+    exact = exact.reshape(h.shape[0], -1)
+    vmask = jnp.repeat(valid, blk, axis=-1)
+    bidx = jnp.arange(h.shape[0])[:, None]
+    out = approx.at[bidx, word].set(jnp.where(vmask, exact, approx[bidx, word]))
+    return out
+
+
+def perplexity(W, b, U, Vt, screen, H, targets, batch: int = 2048) -> float:
+    """PPL over (H (N, d), targets (N,)) with hybrid logits."""
+    Wd, bd = jnp.asarray(W), jnp.asarray(b)
+    Ud, Vtd = jnp.asarray(U), jnp.asarray(Vt)
+
+    @jax.jit
+    def nll(h, t):
+        lg = hybrid_logits(Wd, bd, Ud, Vtd, screen, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, t[:, None], axis=-1)[:, 0]
+        return jnp.sum(lse - gold)
+
+    total = 0.0
+    for i in range(0, H.shape[0], batch):
+        total += float(nll(jnp.asarray(H[i:i + batch]),
+                           jnp.asarray(targets[i:i + batch])))
+    return float(np.exp(total / H.shape[0]))
+
+
+def exact_perplexity(W, b, H, targets, batch: int = 2048) -> float:
+    Wd, bd = jnp.asarray(W), jnp.asarray(b)
+
+    @jax.jit
+    def nll(h, t):
+        lg = (h @ Wd.T + bd).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, t[:, None], axis=-1)[:, 0]
+        return jnp.sum(lse - gold)
+
+    total = 0.0
+    for i in range(0, H.shape[0], batch):
+        total += float(nll(jnp.asarray(H[i:i + batch]),
+                           jnp.asarray(targets[i:i + batch])))
+    return float(np.exp(total / H.shape[0]))

@@ -1,0 +1,2 @@
+from repro.data.synthetic import ZipfMarkovCorpus, make_lm_batches
+from repro.data.loader import BatchLoader, input_specs

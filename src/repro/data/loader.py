@@ -1,0 +1,89 @@
+"""Batch loader + abstract input specs (ShapeDtypeStruct) for the dry-run.
+
+``input_specs(cfg, shape)`` returns the EXACT pytree of inputs each step
+function consumes, as ShapeDtypeStructs — weak-type-correct, shardable, zero
+allocation. This is what ``jax.jit(...).lower(**specs)`` consumes in
+repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+
+class BatchLoader:
+    """Host-side loader: shards a numpy batch over the data axis of a mesh."""
+
+    def __init__(self, generator: Iterator[dict], mesh=None, data_axes=("data",)):
+        self.generator = generator
+        self.mesh = mesh
+        self.data_axes = data_axes
+
+    def __iter__(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        for batch in self.generator:
+            if self.mesh is None:
+                yield {k: jnp.asarray(v) for k, v in batch.items()}
+                continue
+            sh = NamedSharding(self.mesh, P(self.data_axes))
+            yield {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for (arch, input-shape).
+
+    train/prefill:  full-sequence batch.
+    decode:         ONE token per sequence + absolute position (the KV cache /
+                    SSM state is threaded separately by the step function).
+    Modality frontends are stubs (brief carve-out): audio supplies frame
+    embeddings, vlm supplies patch embeddings, both at d_model width.
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B, T = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            spec = {"frames": _sds((B, T, cfg.d_model), dt)}
+        elif cfg.family == "vlm":
+            P_ = cfg.num_patch_tokens
+            spec = {"tokens": _sds((B, T - P_), jnp.int32),
+                    "patches": _sds((B, P_, cfg.d_model), dt)}
+        else:
+            spec = {"tokens": _sds((B, T), jnp.int32)}
+        if shape.kind == "train":
+            lab_T = T - cfg.num_patch_tokens if cfg.family == "vlm" else T
+            spec["labels"] = _sds((B, lab_T), jnp.int32)
+        return spec
+
+    # decode: one new token against a seq_len-deep cache
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    return {"token": _sds((B,), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def random_inputs(cfg: ModelConfig, shape: ShapeConfig | str, seed: int = 0):
+    """Concrete random inputs matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab_size if k in ("tokens", "labels", "token") else 2**30
+            if k == "pos":
+                out[k] = jnp.asarray(0, s.dtype)
+            else:
+                out[k] = jnp.asarray(rng.integers(0, hi, s.shape), s.dtype)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return out

@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``screened_topk_tpu`` is the full L2S decode hot path:
+  route (cluster_route kernel) → gather-matmul (screened_logits kernel) →
+  sentinel masking → top-k over the candidate union.
+
+``interpret`` defaults to True (this container is CPU-only; on TPU pass
+False). The wrappers handle all padding/masking so callers see the same
+contract as the pure-jnp reference path in repro.core.screening.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import NEG_INF
+from repro.kernels.route import cluster_route_pallas
+from repro.kernels.screen import V_BLK, screened_logits_pallas
+
+
+def pack_head_blocks(W: jnp.ndarray, b: jnp.ndarray, v_blk: int = V_BLK):
+    """(L, d) softmax weights → MXU-tiled (n_blk, v_blk, d) + (n_blk, v_blk).
+
+    Rows past L are zero-padded with −inf bias so they never win top-k."""
+    L, d = W.shape
+    n_blk = -(-L // v_blk)
+    Wp = jnp.pad(W, ((0, n_blk * v_blk - L), (0, 0)))
+    bp = jnp.pad(b, (0, n_blk * v_blk - L), constant_values=NEG_INF)
+    return Wp.reshape(n_blk, v_blk, d), bp.reshape(n_blk, v_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def screened_topk_tpu(W_blocks, b_blocks, v, cand_blocks, h, k: int = 5,
+                      interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full kernelized L2S prediction.
+
+    W_blocks (n_blk, V_BLK, d), b_blocks (n_blk, V_BLK): packed softmax head.
+    v (r, d): cluster weights. cand_blocks (r, K) int32, sentinel ≥ n_blk.
+    h (B, d): context vectors. → (word ids (B, k), logits (B, k)).
+    """
+    n_blk, v_blk, d = W_blocks.shape
+    cluster = cluster_route_pallas(h, v, interpret=interpret)        # (B,)
+    block_ids = cand_blocks[cluster]                                 # (B, K)
+    raw = screened_logits_pallas(W_blocks, b_blocks, h, block_ids,
+                                 interpret=interpret)                # (B, K, V)
+    valid = (block_ids < n_blk)[..., None]
+    logits = jnp.where(valid, raw, NEG_INF).reshape(h.shape[0], -1)
+    word_ids = jnp.where(
+        valid, block_ids[..., None] * v_blk +
+        jnp.arange(v_blk, dtype=jnp.int32)[None, None, :],
+        n_blk * v_blk).reshape(h.shape[0], -1)
+    vals, pos = jax.lax.top_k(logits, k)
+    ids = jnp.take_along_axis(word_ids, pos, axis=-1)
+    return ids, vals

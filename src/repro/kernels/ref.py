@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def screened_logits_ref(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
+                        h: jnp.ndarray, block_ids: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the screened-logits gather-matmul.
+
+    W_blocks (n_blk, V_BLK, d); b_blocks (n_blk, V_BLK); h (B, d);
+    block_ids (B, K) int32 with sentinel ≥ n_blk → masked to −inf.
+    Returns (B, K, V_BLK) float32.
+    """
+    n_blk = W_blocks.shape[0]
+    valid = block_ids < n_blk
+    safe = jnp.where(valid, block_ids, 0)
+    w = W_blocks[safe]                                   # (B, K, V_BLK, d)
+    logits = jnp.einsum("bkvd,bd->bkv", w.astype(jnp.float32),
+                        h.astype(jnp.float32))
+    logits = logits + b_blocks[safe].astype(jnp.float32)
+    return jnp.where(valid[..., None], logits, NEG_INF)
+
+
+def cluster_route_ref(h: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for fused cluster scoring + top-1 routing.
+
+    h (B, d); v (r, d) → (B,) int32 = argmax_t v_t·h.
+    """
+    scores = jnp.einsum("bd,rd->br", h.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def subset_softmax_topk_ref(logits: jnp.ndarray, k: int):
+    """Oracle for top-k + renormalized log-probs over screened logits.
+
+    logits (B, C) with −inf padding → (ids (B, k), logprobs (B, k))."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    vals, ids = jax.lax.top_k(lp, k)
+    return ids.astype(jnp.int32), vals

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: screened-logits gather-matmul (the L2S hot path).
+
+The TPU adaptation of the paper's candidate-set softmax (DESIGN §3): candidate
+sets are sets of V_BLK-row vocab blocks, so the "gather" is a blocked DMA that
+streams exactly the candidate tiles of W from HBM into VMEM.
+
+Mechanism: ``PrefetchScalarGridSpec(num_scalar_prefetch=1)`` — the per-(row,
+slot) block ids are prefetched into SMEM before the grid runs, and W's
+BlockSpec ``index_map`` reads them to choose WHICH (V_BLK, d) tile of W each
+program instance DMAs. This is the canonical Pallas sparse-gather pattern.
+
+Grid: (B, K_max) — one program per (query row, candidate slot).
+VMEM per step: V_BLK·d (W tile) + d (h row) + V_BLK (bias+out) ≈ 2·128·d bytes
+(bf16) — ≤ 4 MB at d = 8192, well inside the ~16 MB v5e VMEM budget; the
+matmul dims (V_BLK=128 rows × d cols) are MXU-aligned.
+
+Sentinel block ids (≥ n_blocks) are mapped to tile 0 by the index_map and
+masked to −inf in the wrapper (ops.py) — the kernel itself stays branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+V_BLK = 128
+
+
+def _screened_logits_kernel(block_ids_ref, w_ref, h_ref, b_ref, out_ref):
+    """One (row, slot): out[V_BLK] = W_tile (V_BLK, d) · h (d,) + bias."""
+    w = w_ref[0]                       # (V_BLK, d)
+    h = h_ref[0]                       # (d,)
+    acc = jax.lax.dot_general(
+        w, h[:, None],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                            # (V_BLK,)
+    out_ref[0, 0, :] = acc + b_ref[0].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def screened_logits_pallas(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
+                           h: jnp.ndarray, block_ids: jnp.ndarray,
+                           interpret: bool = True) -> jnp.ndarray:
+    """W_blocks (n_blk, V_BLK, d); b_blocks (n_blk, V_BLK); h (B, d);
+    block_ids (B, K) int32 (sentinel ≥ n_blk). → raw logits (B, K, V_BLK) f32
+    (sentinel tiles NOT yet masked — ops.py applies the −inf mask)."""
+    n_blk, v_blk, d = W_blocks.shape
+    B, K = block_ids.shape
+    safe_ids = jnp.where(block_ids < n_blk, block_ids, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            # W: tile selected by the prefetched id for (row i, slot j)
+            pl.BlockSpec((1, v_blk, d), lambda i, j, ids: (ids[i, j], 0, 0)),
+            # h: row i
+            pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+            # bias: same tile as W
+            pl.BlockSpec((1, v_blk), lambda i, j, ids: (ids[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, v_blk), lambda i, j, ids: (i, j, 0)),
+    )
+    return pl.pallas_call(
+        _screened_logits_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, v_blk), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, W_blocks, h, b_blocks)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk dual form.
+
+The SSD chunked algorithm (arXiv:2405.21060) splits the sequence into chunks
+of Q; within a chunk the output is the masked "attention-like" dual
+
+    y[t] = Σ_{s ≤ t} exp(l_t − l_s) · (C_t·B_s) · x̄_s          (x̄ = dt·x)
+    S_c  = Σ_s exp(l_Q − l_s) · B_s ⊗ x̄_s                       (chunk state)
+
+— two MXU matmuls plus an elementwise decay mask per (batch, chunk, head).
+This is the compute hot spot of the mamba2-1.3b / zamba2-2.7b configs; the
+kernel keeps the (Q, Q) score tile and the (Q, N)/(Q, P) operands in VMEM
+for one grid step (Q=256, N=128, P=64 → ~0.6 MB, MXU-aligned dims).
+
+Heads share B/C through groups (GVA-style): the index_map sends head h to
+group h // (H/G), so the group tensors are never head-expanded in HBM.
+
+Grid: (B, nc, H). The inter-chunk recurrence (tiny, sequential) stays in
+`lax.scan` — see repro.layers.ssm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_intra_kernel(x_ref, b_ref, c_ref, l_ref, y_ref, s_ref):
+    """One (batch, chunk, head): x (Q, P); B, C (Q, N); l (Q,) cumulative
+    log-decay. Outputs y (Q, P) and chunk-state summary S (N, P)."""
+    x = x_ref[0, 0, :, 0, :]                   # (Q, P)
+    Bm = b_ref[0, 0, :, 0, :]                  # (Q, N)
+    Cm = c_ref[0, 0, :, 0, :]                  # (Q, N)
+    l = l_ref[0, 0, :, 0]                      # (Q,)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Qt, Qs)
+    diff = l[:, None] - l[None, :]                                 # l_t − l_s
+    Q = x.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(jnp.where(col <= row, diff, NEG_INF))
+    M = cb * decay
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+    y_ref[0, 0, :, 0, :] = y
+
+    w_end = jnp.exp(l[-1] - l)                                     # (Q,)
+    Bw = Bm * w_end[:, None]
+    S = jax.lax.dot_general(Bw, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (N, P)
+    s_ref[0, 0, 0, :, :] = S
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "interpret"))
+def ssd_intra_pallas(xw: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
+                     l: jnp.ndarray, n_groups: int = 1,
+                     interpret: bool = True):
+    """xw (B, nc, Q, H, P) dt-weighted inputs; Bm/Cm (B, nc, Q, G, N);
+    l (B, nc, Q, H) cumulative log decay. → (y (B, nc, Q, H, P) f32,
+    S (B, nc, H, N, P) f32)."""
+    B, nc, Q, H, P = xw.shape
+    G, N = Bm.shape[3], Bm.shape[4]
+    rep = H // G
+
+    grid = (B, nc, H)
+    y, S = pl.pallas_call(
+        _ssd_intra_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N),
+                         lambda b, c, h, rep=rep: (b, c, 0, h // rep, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N),
+                         lambda b, c, h, rep=rep: (b, c, 0, h // rep, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xw.astype(jnp.float32), Bm.astype(jnp.float32),
+      Cm.astype(jnp.float32), l.astype(jnp.float32))
+    return y, S
+
+
+def ssd_intra_ref(xw, Bm, Cm, l):
+    """Pure-jnp oracle (same math as repro.layers.ssm.ssd_chunked's intra
+    terms). xw (B,nc,Q,H,P); Bm/Cm (B,nc,Q,G,N); l (B,nc,Q,H)."""
+    H = xw.shape[3]
+    G = Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=3)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=3)
+    xf = xw.astype(jnp.float32)
+    lf = l.astype(jnp.float32)
+    Q = xw.shape[2]
+    diff = lf[:, :, :, None, :] - lf[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, diff, NEG_INF))
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", Ch, Bh)
+    y = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", cb, decay, xf)
+    w_end = jnp.exp(lf[:, :, -1:, :] - lf)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w_end, Bh, xf)
+    return y, S

@@ -1,0 +1,29 @@
+"""Production meshes. TPU v5e target: 16×16 = 256 chips/pod, 2 pods = 512.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state — required because the dry-run overrides the host device count and the
+smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes used for batch/data parallelism (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,276 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per architecture.
+
+Megatron-style baseline (see EXPERIMENTS.md §Perf for the hillclimbed
+variants):
+  * vocab dim of embedding / LM head → "model"
+  * attention heads → "model"; GQA/MQA weights whose kv-head axis is too
+    small fall back to sharding head_dim, else replicate (divisibility-driven)
+  * MLP ff dim → "model" (column ∥ up/gate, row ∥ down)
+  * MoE experts: tensor-parallel inside experts (ff → "model"); the
+    expert-parallel alternative is selected when num_experts is divisible by
+    the model-axis size (phi3.5: 16e on 16-way → 1 expert/shard)
+  * Mamba2: inner channels / heads → "model"
+  * batch → ("pod", "data"); long_500k (batch=1) shards the cache/sequence
+    instead
+Rules are divisibility-checked against the actual mesh so every assigned
+architecture lowers on both production meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes, mesh_axis_sizes
+
+
+def _divisible(n: int, size: int) -> bool:
+    return n % size == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return "/".join(out)
+
+
+def param_spec(path: str, shape: tuple, cfg: ModelConfig, msize: int,
+               expert_parallel: bool = False) -> P:
+    """PartitionSpec for one param given its path and shape."""
+    none = (None,) * len(shape)
+
+    def at(axis: int, name: str = "model") -> P:
+        spec = list(none)
+        spec[axis] = name
+        return P(*spec)
+
+    last = path.split("/")[-1]
+    # embeddings / head: vocab axis → model
+    if last in ("embedding", "lm_head"):
+        return at(0) if _divisible(shape[0], msize) else P(*none)
+    if last == "lm_bias":
+        return at(0) if _divisible(shape[0], msize) else P(*none)
+
+    # attention (stacked: leading L axis for blocks, none for shared).
+    # Megatron rule: shard the HEADS axis when divisible, else REPLICATE.
+    # (Never shard head_dim: the score contraction over hd would all-reduce
+    # full (B,H,T,S) tensors — catastrophic; measured in §Perf notes.)
+    off = 1 if path.startswith("stack/blocks") else 0
+    if "attn" in path:
+        if last == "wq":            # (d, H, hd)
+            h_ax = off + 1
+            return at(h_ax) if _divisible(shape[h_ax], msize) else P(*none)
+        if last in ("wk", "wv"):    # (d, KV, hd)
+            kv_ax = off + 1
+            return at(kv_ax) if _divisible(shape[kv_ax], msize) else P(*none)
+        if last == "wo":            # (H, hd, d)
+            h_ax = off
+            return at(h_ax) if _divisible(shape[h_ax], msize) else P(*none)
+        if last == "bq":            # (H, hd)
+            h_ax = off
+            return at(h_ax) if _divisible(shape[h_ax], msize) else P(*none)
+        if last in ("bk", "bv"):
+            kv_ax = off
+            return at(kv_ax) if _divisible(shape[kv_ax], msize) else P(*none)
+
+    # MoE stacked experts: (L, E, d, ff) or (L, E, ff, d); router (L, d, E)
+    if "moe" in path:
+        if last == "w_router":
+            return P(*none)
+        e_ax = off
+        if expert_parallel and _divisible(shape[e_ax], msize):
+            return at(e_ax)
+        if last in ("w_gate", "w_up"):       # (..., E, d, ff)
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+        if last == "w_down":                  # (..., E, ff, d)
+            return at(len(shape) - 2) if _divisible(shape[-2], msize) else P(*none)
+
+    # dense MLP: (L?, d, ff) / (L?, ff, d)
+    if "mlp" in path:
+        if last in ("w_gate", "w_up"):
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+        if last == "w_down":
+            return at(len(shape) - 2) if _divisible(shape[-2], msize) else P(*none)
+
+    # Mamba2 / SSD
+    if "ssm" in path:
+        if last in ("in_proj",):              # (L?, d, e_out)
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+        if last == "out_proj":                # (L?, dinner, d)
+            return at(len(shape) - 2) if _divisible(shape[-2], msize) else P(*none)
+        if last in ("conv_w",):               # (L?, W, C)
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+        if last in ("conv_b", "norm_scale"):  # (L?, C)
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+        if last in ("A_log", "D", "dt_bias"):  # (L?, H)
+            return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+
+    # LSTM: (d, 4d) — shard gate dim
+    if "lstm" in path and last in ("wx", "wh"):
+        return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+    if "lstm" in path and last == "b":
+        return at(len(shape) - 1) if _divisible(shape[-1], msize) else P(*none)
+
+    if last in ("vision_proj", "frame_proj"):
+        return at(1) if _divisible(shape[1], msize) else P(*none)
+
+    # norms & everything else: replicated
+    return P(*none)
+
+
+def _augment_fsdp(spec: P, path: str, shape: tuple, dsize: int,
+                  min_dim: int = 512) -> P:
+    """Add FSDP sharding over "data" on the largest still-unsharded big dim.
+
+    Weight-sharding over the data axis (MaxText-style fsdp) is required to
+    fit the large configs on v5e HBM (e.g. qwen1.5-110b: bf16 params at
+    16-way TP alone are 13.7 GB/chip). GSPMD turns this into per-layer
+    all-gathers inside the scan — the standard FSDP schedule. The stacked
+    layer axis (axis 0 of stack/blocks params) is never sharded: scan slices
+    along it every iteration."""
+    spec_l = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if path.startswith("stack/blocks") else 0
+    best, best_ax = 0, None
+    for ax in range(start, len(shape)):
+        if spec_l[ax] is not None:
+            continue
+        if shape[ax] >= min_dim and shape[ax] % dsize == 0 and shape[ax] > best:
+            best, best_ax = shape[ax], ax
+    if best_ax is not None:
+        spec_l[best_ax] = "data"
+    return P(*spec_l)
+
+
+def params_shardings(mesh, cfg: ModelConfig, abstract_params,
+                     expert_parallel: bool = False, fsdp: bool = True):
+    """Pytree of NamedShardings matching an abstract param pytree."""
+    sizes = mesh_axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dsize = sizes.get("data", 1)
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        spec = param_spec(ps, leaf.shape, cfg, msize, expert_parallel)
+        if fsdp:
+            spec = _augment_fsdp(spec, ps, leaf.shape, dsize)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+def batch_shardings(mesh, cfg: ModelConfig, abstract_batch):
+    """Inputs: batch axis over (pod, data) when divisible, else replicated."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh_axis_sizes(mesh)[a] for a in daxes]))
+
+    def f(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dsize == 0 and leaf.shape[0] > 1:
+            return NamedSharding(mesh, P(daxes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(f, abstract_batch)
+
+
+def cache_shardings(mesh, cfg: ModelConfig, abstract_cache,
+                    force_seq_shard: bool = False):
+    """Decode caches. Stacked layout (L, B, ...):
+      batch → data when divisible; otherwise the attention SEQUENCE dim →
+      data (long-context sequence parallelism, batch=1);
+      kv-heads / ssm-heads / channels → model when divisible.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([sizes[a] for a in daxes]))
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # (L, B, S, KV, hd) attention / (n_super, B, S, KV, hd) shared attn.
+        # Rule: batch → data when divisible; kv-heads → model when divisible;
+        # whatever could not shard goes to the SEQUENCE dim (distributed
+        # flash-decode: scores stay S-sharded, softmax over a sharded axis
+        # costs two tiny all-reduces, and probs·V psums only (B,1,KV,hd)).
+        # Never shard head_dim: a hd-sharded cache forces a full-cache
+        # all-gather against heads-sharded queries (measured 86 GB/step on
+        # qwen1.5-110b decode — EXPERIMENTS.md §Perf HC1).
+        if ps.endswith("/k") or ps.endswith("/v") or "attn" in ps:
+            if len(shape) == 5:
+                _, B, S, KV, hd = shape
+                # SMALL ring caches (sliding-window decode): sequence-sharding
+                # pays the masked-write amplification without amortizing it —
+                # keep the simple layout (hd→model as last resort; the psum of
+                # (B,H,1,S) scores is negligible at these sizes). Measured:
+                # long_500k regressed 2–4× under the big-cache rule.
+                import os
+                baseline = os.environ.get("REPRO_BASELINE_CACHE", "0") == "1"
+                if (S <= 8192 or baseline) and not force_seq_shard:
+                    if B % dsize == 0 and B > 1:
+                        spec[1] = daxes
+                    if KV % msize == 0:
+                        spec[3] = "model"
+                    elif hd % msize == 0:
+                        spec[4] = "model"
+                    return NamedSharding(mesh, P(*spec))
+                seq_axes = []
+                if B % dsize == 0 and B > 1 and not force_seq_shard:
+                    spec[1] = daxes
+                else:
+                    seq_axes.extend(daxes)
+                if KV % msize == 0:
+                    spec[3] = "model"
+                else:
+                    seq_axes.append("model")
+                if seq_axes:
+                    ssize = int(np.prod([sizes[a] for a in seq_axes]))
+                    if S % ssize == 0:
+                        spec[2] = tuple(seq_axes) if len(seq_axes) > 1 \
+                            else seq_axes[0]
+                return NamedSharding(mesh, P(*spec))
+        if "state" in ps and len(shape) == 5:   # (L, B, H, P, N)
+            _, B, H, Pp, N = shape
+            if B % dsize == 0 and B > 1:
+                spec[1] = daxes
+            if H % msize == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if "conv_tail" in ps and len(shape) == 4:  # (L, B, W-1, C)
+            _, B, W, C = shape
+            if B % dsize == 0 and B > 1:
+                spec[1] = daxes
+            if C % msize == 0:
+                spec[3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # lstm state (B, d)
+        if len(shape) == 2:
+            B, d = shape
+            if B % dsize == 0 and B > 1:
+                spec[0] = daxes
+            if d % msize == 0:
+                spec[1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(f, abstract_cache)
+
+
+def screen_shardings(mesh, abstract_screen):
+    """L2S screening params: v (r, d) and cand_idx (r, K) are small —
+    replicated in the baseline (the vocab-sharded L2S variant lives in the
+    perf experiments)."""
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()),
+                                  abstract_screen)
+
+
+def replicated(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,155 @@
+"""The jit-able step functions the dry-run lowers and the launchers run.
+
+  train_step    — fwd + bwd + global-norm clip + AdamW (full training step)
+  prefill_step  — full-sequence forward + last-position top-k logits
+  serve_step    — ONE-token decode against a deep cache; two head variants:
+                    'full' : exact softmax over the whole vocab (baseline)
+                    'l2s'  : the paper's screened softmax (route + candidate
+                             gather + subset top-k)
+The screened serve_step takes the screening model (v, cand_idx) as runtime
+inputs so the same compiled step serves any trained screen.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import L2SConfig, ModelConfig, TrainConfig
+from repro.core.screening import ScreenParams, assign_clusters
+from repro.models.lm import train_loss
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+TOPK = 5
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """fwd+bwd+clip+AdamW. ``tcfg.microbatch = m`` splits the global batch
+    into m sequential microbatches with gradient accumulation (scan) — the
+    standard activation-memory control at production batch sizes."""
+    loss_fn = lambda p, b: train_loss(model, p, b, loss_chunk=tcfg.loss_chunk,
+                                      remat=(tcfg.remat == "block"))
+
+    def train_step(params, opt_state, batch):
+        m = tcfg.microbatch
+        if m is None or m <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                loss_a, g_a = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_a = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_a, g)
+                return (loss_a + l, g_a), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), g0), micro)
+            loss = loss / m
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        # schedule off the 1-based step (the 0-based pre-update counter would
+        # make the first step a warmup no-op)
+        lr = cosine_schedule(opt_state.step + 1, tcfg.lr, tcfg.warmup_steps,
+                             tcfg.total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, lr,
+                                         tcfg.b1, tcfg.b2,
+                                         weight_decay=tcfg.weight_decay)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+    return train_step
+
+
+def default_microbatches(cfg: ModelConfig, global_batch: int, seq_len: int,
+                         data_shards: int, budget_bytes: float = 6e9
+                         ) -> Optional[int]:
+    """Pick a microbatch count so rematted residuals (L·B_loc·T·d·2 bytes)
+    fit the activation budget. Returns None when no split is needed."""
+    b_loc = max(global_batch // max(data_shards, 1), 1)
+    resid = 2.0 * cfg.num_layers * b_loc * seq_len * cfg.d_model
+    m = 1
+    while resid / m > budget_bytes and m < b_loc:
+        m *= 2
+    while global_batch % m:
+        m //= 2
+    return m if m > 1 else None
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        h, _ = model.forward(params, batch)
+        logits = model.logits(params, h[:, -1])          # last position only
+        vals, ids = jax.lax.top_k(logits.astype(jnp.float32), TOPK)
+        return ids, vals
+    return prefill_step
+
+
+def make_serve_step(model: Model, head: str = "full",
+                    window: Optional[int] = None):
+    """head: 'full' | 'l2s'. Signature:
+       full: (params, cache, token, pos) → (ids, vals, cache)
+       l2s:  (params, screen_v, cand_idx, cache, token, pos) → (ids, vals, cache)
+    """
+    cfg = model.cfg
+
+    if head == "full":
+        def serve_step(params, cache, token, pos):
+            h, cache = model.decode_step(params, token, cache, pos,
+                                         window=window)
+            logits = model.logits(params, h)
+            vals, ids = jax.lax.top_k(logits.astype(jnp.float32), TOPK)
+            return ids, vals, cache
+        return serve_step
+
+    def serve_step_l2s(params, screen_v, cand_idx, cache, token, pos):
+        h, cache = model.decode_step(params, token, cache, pos, window=window)
+        W, b = model.softmax_weights(params)
+        ids, vals = _screened_topk_inline(W, b, screen_v, cand_idx, h, TOPK)
+        return ids, vals, cache
+    return serve_step_l2s
+
+
+def _screened_topk_inline(W, b, v, cand_idx, h, k):
+    """Word-granular screened top-k (jnp path used in the distributed step;
+    the Pallas kernel path is exercised in kernels/ and serving/)."""
+    L, d = W.shape
+    cluster = assign_clusters(v, h)
+    items = cand_idx[cluster]                            # (B, C_max)
+    valid = items < L
+    safe = jnp.where(valid, items, 0)
+    w = W[safe]                                          # (B, C_max, d)
+    logits = jnp.einsum("bcd,bd->bc", w.astype(jnp.float32),
+                        h.astype(jnp.float32)) + b[safe]
+    logits = jnp.where(valid, logits, -1e30)
+    vals, pos = jax.lax.top_k(logits, k)
+    ids = jnp.take_along_axis(jnp.where(valid, items, L), pos, axis=-1)
+    return ids, vals
+
+
+def abstract_screen(cfg: ModelConfig, l2s: L2SConfig):
+    """ShapeDtypeStructs for the screening inputs of the l2s serve step."""
+    r = l2s.num_clusters
+    # padded candidate capacity: budget × small slack, word granularity
+    c_max = max(8, -(-int(l2s.budget * 2) // 8) * 8)
+    # the backbone hidden dim is d_model for every decoder family
+    return (jax.ShapeDtypeStruct((r, cfg.d_model), jnp.dtype(cfg.dtype)),
+            jax.ShapeDtypeStruct((r, c_max), jnp.int32))
+
+
+def abstract_cache(model: Model, batch: int, max_len: int,
+                   window: Optional[int] = None, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, dtype=dtype, window=window))
+
+
+def abstract_params(model: Model):
+    return model.init_shapes()
+
+
+def abstract_opt_state(aparams):
+    return jax.eval_shape(adamw_init, aparams)

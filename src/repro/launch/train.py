@@ -1,0 +1,85 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-360m ...``
+
+Single-host execution path (runs the REDUCED config on CPU for real; the FULL
+configs are exercised via the dry-run). On a real TPU slice the same code
+runs the full config — the mesh/sharding logic is shared with dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import TrainConfig, get_config
+from repro.data import ZipfMarkovCorpus, make_lm_batches
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ptb-small-lstm")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1),
+                      remat="none", loss_chunk=None)
+    params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
+    opt_state = adamw_init(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), meta = load_checkpoint(args.ckpt_dir,
+                                                    (params, opt_state))
+        start = meta.get("step", 0)
+        print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=min(64, cfg.vocab_size // 4),
+                              seed=args.seed)
+    t0 = time.time()
+    for i, batch in enumerate(make_lm_batches(corpus, args.steps - start,
+                                              args.batch, args.seq,
+                                              seed=args.seed + start)):
+        if cfg.family == "audio":
+            rng = np.random.default_rng(args.seed + i)
+            batch = {"frames": rng.standard_normal(
+                        (args.batch, args.seq, cfg.d_model)).astype(np.float32),
+                     "labels": batch["labels"] % cfg.vocab_size}
+        elif cfg.family == "vlm":
+            rng = np.random.default_rng(args.seed + i)
+            batch = dict(batch, patches=rng.standard_normal(
+                (args.batch, cfg.num_patch_tokens, cfg.d_model)).astype(np.float32))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        step = start + i + 1
+        if step % args.log_every == 0 or step == args.steps:
+            print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['gnorm']):.3f} "
+                  f"({(time.time() - t0) / max(i + 1, 1):.2f}s/step)")
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, (params, opt_state),
+                        {"step": args.steps, "arch": cfg.name})
+        print(f"[train] saved checkpoint at step {args.steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

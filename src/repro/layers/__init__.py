@@ -1,0 +1,3 @@
+from repro.layers.norms import rmsnorm, layernorm, norm_apply, norm_init
+from repro.layers.rope import rope_freqs, apply_rope, mrope_positions
+from repro.layers.initializers import dense_init, zeros_init

@@ -1,0 +1,231 @@
+"""Attention: MHA / GQA / MQA with RoPE or M-RoPE, causal or bidirectional
+masks, sliding-window variants, and one-token KV-cache decode (standard and
+ring-buffer window caches).
+
+Conventions:
+  x                (B, T, d_model)
+  q                (B, T, H, hd)      grouped as (B, T, KV, Q_PER_KV, hd)
+  k, v             (B, S, KV, hd)
+  cache            dict(k, v)         k/v (B, S_max, KV, hd); RoPE applied at
+                                      write time (absolute positions).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.initializers import dense_init
+from repro.layers.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype),
+        "wo": dense_init(ks[3], (h, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """positions: (B, T) int32 for rope | (B, T, 3) for mrope | None."""
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.positional == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,T,H,hd), k/v (B,S,KV,hd), mask (B,T,S) or (T,S) bool (True=keep).
+
+    Matmuls run in the storage dtype with f32 accumulation
+    (preferred_element_type) — casting the cache itself to f32 would force a
+    full-cache f32 materialization every decode step."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, T, KV, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k.astype(qg.dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype),
+                     v, preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+# Above this many query positions, full-sequence attention switches to the
+# chunked online-softmax path so the (T, S) score matrix never materializes.
+CHUNKED_ATTN_THRESHOLD = 2048
+Q_CHUNK = 512
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, causal: bool,
+                  window: Optional[int], q_chunk: int = Q_CHUNK):
+    """Memory-bounded attention: sequential scan over query chunks.
+
+    Only one (B, KV, g, q_chunk, S) score tile is live at a time (softmax is
+    taken over the full key axis per chunk, so no online-softmax carry is
+    needed). Exact — tested allclose vs _sdpa. This is the flash-attention
+    memory discipline expressed in pure JAX; on real TPU the same tiling
+    would live in a Pallas kernel.
+
+    SEQUENCE-PARALLEL path (EXPERIMENTS.md §Perf HC2): when the head count
+    does not divide the model axis (smollm 15H, gemma 8H, starcoder2 24H,
+    qwen2-vl 12H on a 16-way axis), head sharding is impossible and the
+    baseline replicates attention over `model` — per-device attention cost
+    ×msize. Instead we shard each chunk's QUERY dim over `model`: every
+    device computes q_chunk/msize query rows against the full (replicated)
+    K/V. Score/prob tiles, flops, and HBM traffic all divide by msize; the
+    only new collective is the output re-gather, O(B·T·H·hd) ≪ scores.
+    """
+    from repro.utils.shard import model_axis_size, shard_axis
+
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    pad = (-T) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (T + pad) // q_chunk
+    qc = q.reshape(B, nq, q_chunk, KV, g, hd)
+    kf = k.astype(q.dtype)
+    vf = v.astype(q.dtype)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kpos = jnp.arange(S)
+    import os
+    msize = model_axis_size()
+    # REPRO_SEQ_PARALLEL=0 reproduces the paper-faithful replicated baseline
+    seq_parallel = (os.environ.get("REPRO_SEQ_PARALLEL", "1") == "1"
+                    and msize > 1 and H % msize != 0
+                    and q_chunk % msize == 0)
+
+    def chunk_body(_, qi_i):
+        qi, i = qi_i                                  # (B, qc, KV, g, hd)
+        if seq_parallel:
+            qi = shard_axis(qi, 1, "model")
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qi, kf,
+                            preferred_element_type=jnp.float32) * scale
+        m = jnp.ones((q_chunk, S), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        if seq_parallel:
+            scores = shard_axis(scores, 3, "model")
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(vf.dtype), vf,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, outs = jax.lax.scan(chunk_body, None,
+                           (jnp.moveaxis(qc, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T + pad, H, hd)
+    return out[:, :T].astype(q.dtype)
+
+
+def make_mask(T: int, S: int, causal: bool, window: Optional[int] = None,
+              q_offset: int = 0) -> jnp.ndarray:
+    """(T, S) bool keep-mask. ``q_offset``: absolute position of query row 0."""
+    qpos = jnp.arange(T)[:, None] + q_offset
+    kpos = jnp.arange(S)[None, :]
+    m = jnp.ones((T, S), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attn_forward(params, x, cfg: ModelConfig, positions,
+                 causal: bool = True, window: Optional[int] = None):
+    """Full-sequence attention (training / prefill). Returns (B, T, d)."""
+    return attn_forward_kv(params, x, cfg, positions, causal, window)[0]
+
+
+def attn_forward_kv(params, x, cfg: ModelConfig, positions,
+                    causal: bool = True, window: Optional[int] = None):
+    """Like attn_forward but also returns (k, v) for cache priming."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    T = x.shape[1]
+    w = window if window is not None else cfg.sliding_window
+    is_causal = causal and not cfg.is_encoder
+    if T >= CHUNKED_ATTN_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, cfg, is_causal, w)
+    else:
+        mask = make_mask(T, T, causal=is_causal, window=w)
+        out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), k, v
+
+
+# -- KV-cache decode ---------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window: Optional[int] = None):
+    """Standard cache of ``max_len`` slots, or ring buffer of ``window``."""
+    S = window if window is not None else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, kv, hd), dtype),
+        "v": jnp.zeros((batch, S, kv, hd), dtype),
+    }
+
+
+def attn_decode(params, x1, cache, pos, cfg: ModelConfig,
+                window: Optional[int] = None):
+    """One-token decode. x1: (B, 1, d); pos: scalar int32 (absolute position).
+
+    Returns (out (B, 1, d), new_cache). Ring-buffer semantics when ``window``
+    (or cfg.sliding_window) is set and the cache S equals that window.
+    """
+    B = x1.shape[0]
+    if cfg.positional == "mrope":
+        p3 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1, 3))
+        q, k, v = _project_qkv(params, x1, cfg, p3)
+    else:
+        p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+        q, k, v = _project_qkv(params, x1, cfg, p)
+    S = cache["k"].shape[1]
+    w = window if window is not None else cfg.sliding_window
+    is_ring = w is not None and S == w
+    slot = (pos % S) if is_ring else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    if is_ring:
+        valid = jnp.arange(S) < jnp.minimum(pos + 1, S)      # (S,)
+    else:
+        valid = jnp.arange(S) <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+    out = _sdpa(q, ck, cv, mask, cfg)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,35 @@
+"""Token embedding + LM head (optionally tied)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.initializers import dense_init
+
+
+def embed_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)
+    p["lm_bias"] = jnp.zeros((cfg.vocab_size,), dtype)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    e = params["embedding"][tokens]
+    if cfg.family in ("dense", "moe", "vlm"):  # gemma-style sqrt(d) scaling only for gemma
+        pass
+    return e
+
+
+def head_matrix(params, cfg: ModelConfig) -> jnp.ndarray:
+    """The softmax weight matrix W (vocab, d) the paper screens."""
+    return params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def lm_logits(params, h, cfg: ModelConfig) -> jnp.ndarray:
+    """Full (unscreened) softmax logits: x = W·h + b. h: (..., d)."""
+    W = head_matrix(params, cfg)
+    return jnp.einsum("...d,vd->...v", h, W) + params["lm_bias"]

@@ -1,0 +1,23 @@
+"""Parameter initializers (no flax in the container — hand-rolled)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if len(shape) >= 2:
+        fan_in = int(np.prod(shape[:-1]))
+    std = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)

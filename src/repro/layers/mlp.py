@@ -1,0 +1,37 @@
+"""MLP blocks: SwiGLU / GeGLU (gated) and GELU / ReLU (plain 2-matmul)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.initializers import dense_init
+
+GATED = ("swiglu", "geglu")
+
+
+def mlp_init(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation in GATED:
+        return {
+            "w_gate": dense_init(ks[0], (d, ff), dtype),
+            "w_up": dense_init(ks[1], (d, ff), dtype),
+            "w_down": dense_init(ks[2], (ff, d), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, ff), dtype),
+        "w_down": dense_init(ks[1], (ff, d), dtype),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    act = cfg.mlp_activation
+    if act in GATED:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        return jnp.einsum("...f,fd->...d", g * u, params["w_down"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    u = jax.nn.gelu(u, approximate=True) if act == "gelu" else jax.nn.relu(u)
+    return jnp.einsum("...f,fd->...d", u, params["w_down"])

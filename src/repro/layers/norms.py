@@ -1,0 +1,34 @@
+"""RMSNorm / LayerNorm. Functional: params are dicts of arrays."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def norm_init(d_model: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d_model,), dtype)}
+    elif kind == "layernorm":
+        return {"scale": jnp.ones((d_model,), dtype), "bias": jnp.zeros((d_model,), dtype)}
+    raise ValueError(kind)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * (1.0 / jnp.sqrt(var + eps))
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) / jnp.sqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_apply(params, x, kind: str):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)

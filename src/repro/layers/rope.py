@@ -1,0 +1,87 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the head_dim rotary channels are split into three
+sections (temporal / height / width); each section uses a different component
+of a 3-part position id. For text tokens all three components are equal, so
+M-RoPE degenerates to RoPE. The stub vision frontend supplies (t, h, w)
+grids for patch tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# fraction of rotary channels per (temporal, height, width) section — Qwen2-VL
+MROPE_SECTIONS = (2, 1, 1)  # ratio 2:1:1 over half-dim pairs
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for the rotary pairs: (head_dim//2,) float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, cos, sin):
+    # x: (..., head_dim) with pairs (x1, x2) in the two halves convention
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Standard RoPE. x: (B, T, H, D); positions: (B, T) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (B, T, D/2)
+    cos = jnp.cos(ang)[..., None, :]                             # (B, T, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """M-RoPE. x: (B, T, H, D); positions3: (B, T, 3) int32 (t, h, w)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    total = sum(MROPE_SECTIONS)
+    bounds = []
+    acc = 0
+    for s in MROPE_SECTIONS:
+        acc += int(round(half * s / total))
+        bounds.append(acc)
+    bounds[-1] = half
+    # channel c uses position component section(c)
+    section_of = jnp.zeros((half,), jnp.int32)
+    prev = 0
+    for i, b in enumerate(bounds):
+        section_of = section_of.at[prev:b].set(i)
+        prev = b
+    # pos_per_channel: (B, T, half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(section_of[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1,
+    )
+    ang = pos * freqs                                            # (B, T, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope_positions(batch: int, num_patch: int, text_len: int,
+                    grid_hw: tuple[int, int] | None = None) -> jnp.ndarray:
+    """Build (B, num_patch+text_len, 3) position ids: a patch grid followed by
+    text tokens whose three components are equal (Qwen2-VL convention)."""
+    if num_patch == 0:
+        t = jnp.arange(text_len, dtype=jnp.int32)
+        return jnp.broadcast_to(t[None, :, None], (batch, text_len, 3))
+    if grid_hw is None:
+        side = int(num_patch ** 0.5)
+        while num_patch % side:
+            side -= 1
+        grid_hw = (side, num_patch // side)
+    gh, gw = grid_hw
+    hh, ww = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
+    patch = jnp.stack([jnp.zeros_like(hh), hh, ww], axis=-1).reshape(-1, 3)   # (P, 3)
+    start = int(max(gh, gw))
+    t = start + jnp.arange(text_len, dtype=jnp.int32)
+    text = jnp.stack([t, t, t], axis=-1)                                       # (T, 3)
+    pos = jnp.concatenate([patch.astype(jnp.int32), text], axis=0)
+    return jnp.broadcast_to(pos[None], (batch,) + pos.shape)

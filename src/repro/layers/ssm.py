@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Block structure (per Mamba2):
+  in_proj → [z, x, B, C, dt] → causal depthwise conv on (x,B,C) → SSD scan
+  → gated RMSNorm with silu(z) → out_proj.
+
+The SSD scan is the paper's chunked dual form: the sequence is split into
+chunks of length Q; within a chunk the output is computed with the quadratic
+"attention-like" dual (matmul-friendly → MXU), and a single sequential
+`lax.scan` carries the (H, P, N) state across chunks. Per-head scalar decay
+a_t = exp(dt_t · A_h), A_h = −exp(A_log_h).
+
+Decode is the O(1) recurrence: h ← a·h + dt·(B ⊗ x);  y = C·h + D·x.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.initializers import dense_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    dinner = s.expand * cfg.d_model
+    H = dinner // s.head_dim
+    return s, dinner, H, s.head_dim, s.n_groups, s.state_dim
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, dinner, H, P, G, N = _dims(cfg)
+    conv_ch = dinner + 2 * G * N
+    ks = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba convention)
+    u = jax.random.uniform(ks[2], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * dinner + 2 * G * N + H), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((dinner,), dtype),
+        "out_proj": dense_init(ks[3], (dinner, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(params, u, cfg: ModelConfig):
+    s, dinner, H, P, G, N = _dims(cfg)
+    proj = jnp.einsum("btd,de->bte", u, params["in_proj"])
+    z, xbc, dt = jnp.split(proj, [dinner, 2 * dinner + 2 * G * N], axis=-1)
+    return z, xbc, dt  # xbc = concat(x, B, C) — the conv channels
+
+
+def _causal_conv(xbc, conv_w, conv_b, tail=None):
+    """Depthwise causal conv. xbc (B, T, C); tail (B, W-1, C) left context."""
+    W = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)          # (B, T+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(W))
+    out = out + conv_b
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y / jnp.sqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def ssd_chunked(x, Bm, Cm, dt, A_log, D, chunk: int):
+    """Chunked SSD scan.
+
+    x  (B, T, H, P)   inputs per head
+    Bm (B, T, G, N)   input maps;  Cm same — heads grouped G-way
+    dt (B, T, H)      positive step sizes (softplus already applied)
+    Returns y (B, T, H, P), final state (B, H, P, N).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    rep = H // G
+
+    A = -jnp.exp(A_log.astype(jnp.float32))                       # (H,)
+    dt = dt.astype(jnp.float32)
+    dA = dt * A                                                   # (B, Tp, H) log-decay
+    xw = x.astype(jnp.float32) * dt[..., None]                    # dt-weighted input
+
+    # reshape into chunks
+    xc = xw.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    dAc = dA.reshape(Bsz, nc, Q, H)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                              # (B, nc, Q, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    l = jnp.cumsum(dAc, axis=2)                                   # (B, nc, Q, H) cumulative log decay
+    # intra-chunk dual (attention-like) term:
+    #   M[t,s] = exp(l_t − l_s)·(C_t·B_s) for s ≤ t
+    diff = l[:, :, :, None, :] - l[:, :, None, :, :]              # (B,nc,Q(t),Q(s),H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp(+large) on the dead branch would poison gradients
+    decay = jnp.exp(jnp.where(causal, diff, -1e30))
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", Ch, Bh)                 # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", cb, decay, xc)
+
+    # chunk summary states: S_c = Σ_s exp(l_Q − l_s)·B_s ⊗ x_s  → (B,nc,H,P,N)
+    w_end = jnp.exp(l[:, :, -1:, :] - l)                          # (B,nc,Q,H)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w_end, Bh, xc)
+    a_chunk = jnp.exp(l[:, :, -1, :])                             # (B,nc,H) total chunk decay
+
+    # inter-chunk recurrence (sequential over nc):  Hst ← a_chunk·Hst + S
+    def step(Hst, inp):
+        a_c, S_c = inp                                            # (B,H), (B,H,P,N)
+        Hst_new = Hst * a_c[:, :, None, None] + S_c
+        return Hst_new, Hst                                      # emit PREVIOUS state
+    H0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    Hfin, Hprev = jax.lax.scan(
+        step, H0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S, 1, 0)))
+    Hprev = jnp.moveaxis(Hprev, 0, 1)                             # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += exp(l_t)·C_t·H_prev
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp", jnp.exp(l), Ch, Hprev)
+
+    y = (y_intra + y_inter).reshape(Bsz, Tp, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    if pad:
+        y = y[:, :T]
+    return y, Hfin
+
+
+def ssm_forward(params, u, cfg: ModelConfig,
+                conv_tail=None, state=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence Mamba2 block. u: (B, T, d) → (out, cache dict)."""
+    s, dinner, H, P, G, N = _dims(cfg)
+    z, xbc, dt = _split_proj(params, u, cfg)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_tail)
+    x, Bm, Cm = jnp.split(xbc, [dinner, dinner + G * N], axis=-1)
+    Bsz, T = u.shape[0], u.shape[1]
+    x = x.reshape(Bsz, T, H, P)
+    Bm = Bm.reshape(Bsz, T, G, N)
+    Cm = Cm.reshape(Bsz, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, fin = ssd_chunked(x, Bm, Cm, dt, params["A_log"], params["D"], s.chunk)
+    y = _gated_norm(y.reshape(Bsz, T, dinner), z, params["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y.astype(u.dtype), params["out_proj"])
+    return out, {"conv_tail": new_tail, "state": fin}
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, dinner, H, P, G, N = _dims(cfg)
+    conv_ch = dinner + 2 * G * N
+    return {
+        "conv_tail": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, u1, cache, cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. u1: (B, 1, d). O(1) state update."""
+    s, dinner, H, P, G, N = _dims(cfg)
+    z, xbc, dt = _split_proj(params, u1, cfg)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 cache["conv_tail"])
+    x, Bm, Cm = jnp.split(xbc[:, 0], [dinner, dinner + G * N], axis=-1)
+    Bsz = u1.shape[0]
+    x = x.reshape(Bsz, H, P).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(dt1 * -jnp.exp(params["A_log"]))                             # (B,H)
+    h = cache["state"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt1, x, Bm)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + x * params["D"][None, :, None]
+    y = _gated_norm(y.reshape(Bsz, 1, dinner), z, params["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y.astype(u1.dtype), params["out_proj"])
+    return out, {"conv_tail": new_tail, "state": h}

@@ -1,0 +1,335 @@
+"""Transformer decoder/encoder stacks with ``lax.scan`` over layers.
+
+Scan-over-layers keeps the HLO size O(1) in depth (80-layer qwen1.5-110b
+lowers as one loop) — essential for multi-arch dry-run compile times and the
+standard production pattern. Per-layer params are stacked on a leading L axis.
+
+Block families:
+  * dense/vlm/audio: pre-norm attention + pre-norm MLP
+  * moe: pre-norm attention + pre-norm MoE
+  * ssm (mamba2): pre-norm SSD block only
+  * hybrid (zamba2): SSD layers with ONE weight-shared attention+MLP block
+    applied every ``hybrid_shared_period`` layers (scan over super-blocks)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import (attn_decode, attn_forward, attn_forward_kv,
+                                    attn_init, init_cache as attn_init_cache)
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.norms import norm_apply, norm_init
+from repro.layers.ssm import (ssm_decode_step, ssm_forward, ssm_init,
+                              ssm_init_cache)
+from repro.utils.shard import shard_batch
+
+
+def _stack_layers(per_layer_params):
+    """List of identical pytrees → single pytree with leading layer axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer_params)
+
+
+# -- block init ---------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """One layer's params for the cfg's family."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.family in ("ssm",):
+        return {"norm": norm_init(cfg.d_model, cfg.norm, dtype),
+                "ssm": ssm_init(k1, cfg, dtype)}
+    if cfg.family == "hybrid":
+        return {"norm": norm_init(cfg.d_model, cfg.norm, dtype),
+                "ssm": ssm_init(k1, cfg, dtype)}
+    p = {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg, dtype)
+    return p
+
+
+def shared_block_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Zamba2's single shared attention+MLP block."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(k2, cfg, dtype),
+    }
+
+
+def stack_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    blocks = _stack_layers([block_init(keys[i], cfg, dtype)
+                            for i in range(cfg.num_layers)])
+    p = {"blocks": blocks, "final_norm": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if cfg.family == "hybrid":
+        p["shared"] = shared_block_init(keys[-1], cfg, dtype)
+    return p
+
+
+# -- block apply (full sequence) ----------------------------------------------
+
+def _attn_mlp_block(p, x, cfg: ModelConfig, positions, window=None):
+    h = x + attn_forward(p["attn"], norm_apply(p["norm1"], x, cfg.norm), cfg,
+                         positions, causal=not cfg.is_encoder, window=window)
+    if cfg.family == "moe":
+        y, aux = moe_apply(p["moe"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        return h + y, aux
+    y = mlp_apply(p["mlp"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+    return h + y, jnp.float32(0.0)
+
+
+def stack_forward(params, x, cfg: ModelConfig, positions,
+                  window: Optional[int] = None,
+                  remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence stack. x: (B, T, d) → (h (B, T, d), aux loss).
+
+    ``remat=True`` checkpoints each layer (scan body): backward recomputes
+    the block instead of saving per-layer attention/MoE intermediates as
+    scan residuals — mandatory at production shapes (a 4k×4k score tensor
+    saved for 32 layers is petabytes; see EXPERIMENTS.md §Dry-run).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssm_stack_forward(params, x, cfg, remat=remat)
+
+    def body(carry, p):
+        x, aux = carry
+        x = shard_batch(x)
+        x, a = _attn_mlp_block(p, x, cfg, positions, window)
+        return (shard_batch(x), aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def _ssm_block(p, x, cfg: ModelConfig):
+    y, _ = ssm_forward(p["ssm"], norm_apply(p["norm"], x, cfg.norm), cfg)
+    return x + y
+
+
+def _ssm_stack_forward(params, x, cfg: ModelConfig, remat: bool = False):
+    period = cfg.hybrid_shared_period if cfg.family == "hybrid" else cfg.num_layers
+    L = cfg.num_layers
+    assert L % period == 0, (L, period)
+    n_super = L // period
+    blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["blocks"])
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def super_body(x, p_super):
+        def inner(x, p):
+            return shard_batch(_ssm_block(p, shard_batch(x), cfg)), None
+        if remat:
+            inner = jax.checkpoint(inner)
+        x, _ = jax.lax.scan(inner, x, p_super)
+        if cfg.family == "hybrid":
+            x, _ = _attn_mlp_block(params["shared"], x, cfg, positions,
+                                   window=cfg.sliding_window)
+        return x, None
+
+    if remat:
+        super_body = jax.checkpoint(super_body)
+    x, _ = jax.lax.scan(super_body, x, blocks)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, jnp.float32(0.0)
+
+
+# -- prefill (forward + cache priming) ----------------------------------------
+
+def stack_prefill(params, x, cfg: ModelConfig, positions, cache,
+                  window: Optional[int] = None):
+    """Forward pass that also fills the decode cache with the prompt's K/V
+    (attention) or final SSM states. x: (B, T, d). Returns (h, new_cache).
+
+    Assumes the prompt occupies cache slots [0, T) (standard non-ring prefill;
+    for ring caches T must be ≤ window)."""
+    T = x.shape[1]
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssm_stack_prefill(params, x, cfg, cache, window)
+
+    w = window if window is not None else cfg.sliding_window
+
+    def body(carry, xs):
+        x, aux = carry
+        p, c = xs
+        a_out, k, v = attn_forward_kv(p["attn"], norm_apply(p["norm1"], x, cfg.norm),
+                                      cfg, positions, causal=not cfg.is_encoder,
+                                      window=w)
+        S = c["k"].shape[1]
+        kk = k[:, -S:].astype(c["k"].dtype)
+        vv = v[:, -S:].astype(c["v"].dtype)
+        newc = {
+            "k": jax.lax.dynamic_update_slice(c["k"], kk, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(c["v"], vv, (0, 0, 0, 0)),
+        }
+        h = x + a_out
+        if cfg.family == "moe":
+            y, a = moe_apply(p["moe"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        else:
+            y, a = mlp_apply(p["mlp"], norm_apply(p["norm2"], h, cfg.norm), cfg), 0.0
+        return (h + y, aux + a), newc
+
+    (x, aux), new_attn = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                      (params["blocks"], cache["attn"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, {"attn": new_attn}
+
+
+def _ssm_stack_prefill(params, x, cfg: ModelConfig, cache, window):
+    period = cfg.hybrid_shared_period if cfg.family == "hybrid" else cfg.num_layers
+    L = cfg.num_layers
+    n_super = L // period
+    blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["blocks"])
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def super_body(x, xs):
+        if cfg.family == "hybrid":
+            p_super, attn_c = xs
+        else:
+            (p_super,) = xs
+            attn_c = None
+
+        def inner(x, p):
+            y, c = ssm_forward(p["ssm"], norm_apply(p["norm"], x, cfg.norm), cfg)
+            return x + y, c
+        x, new_ssm = jax.lax.scan(inner, x, p_super)
+        new_attn = None
+        if cfg.family == "hybrid":
+            sp = params["shared"]
+            w = window if window is not None else cfg.sliding_window
+            a_out, k, v = attn_forward_kv(
+                sp["attn"], norm_apply(sp["norm1"], x, cfg.norm), cfg, positions,
+                causal=True, window=w)
+            S = attn_c["k"].shape[1]
+            new_attn = {
+                "k": jax.lax.dynamic_update_slice(
+                    attn_c["k"], k[:, -S:].astype(attn_c["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    attn_c["v"], v[:, -S:].astype(attn_c["v"].dtype), (0, 0, 0, 0)),
+            }
+            h = x + a_out
+            x = h + mlp_apply(sp["mlp"], norm_apply(sp["norm2"], h, cfg.norm), cfg)
+        return x, (new_ssm, new_attn)
+
+    if cfg.family == "hybrid":
+        x, (new_ssm, new_attn) = jax.lax.scan(super_body, x, (blocks, cache["shared_attn"]))
+    else:
+        x, (new_ssm, _) = jax.lax.scan(super_body, x, (blocks,))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    new_cache = {"ssm": jax.tree_util.tree_map(
+        lambda a: a.reshape((L,) + a.shape[2:]), new_ssm)}
+    if cfg.family == "hybrid":
+        new_cache["shared_attn"] = new_attn
+    return x, new_cache
+
+
+# -- caches & decode ----------------------------------------------------------
+
+def stack_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, window: Optional[int] = None):
+    """Stacked per-layer caches (leading L axis) + shared-block caches."""
+    L = cfg.num_layers
+    if cfg.family in ("ssm", "hybrid"):
+        one = ssm_init_cache(cfg, batch, dtype)
+        cache = {"ssm": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)}
+        if cfg.family == "hybrid":
+            n_super = L // cfg.hybrid_shared_period
+            w = window if window is not None else cfg.sliding_window
+            one_attn = attn_init_cache(cfg, batch, max_len, dtype, window=w)
+            cache["shared_attn"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape).copy(),
+                one_attn)
+        return cache
+    w = window if window is not None else cfg.sliding_window
+    one = attn_init_cache(cfg, batch, max_len, dtype, window=w)
+    return {"attn": jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)}
+
+
+def stack_decode(params, x1, cache, pos, cfg: ModelConfig,
+                 window: Optional[int] = None):
+    """One-token decode through the stack. x1: (B, 1, d)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssm_stack_decode(params, x1, cache, pos, cfg, window)
+
+    def body2(x, xs):
+        p, c = xs
+        a_out, newc = _decode_attn(p, x, c, pos, cfg, window)
+        h = x + a_out
+        if cfg.family == "moe":
+            y, _ = moe_apply(p["moe"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        else:
+            y = mlp_apply(p["mlp"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        return h + y, newc
+
+    x, new_attn = jax.lax.scan(body2, x1, (params["blocks"], cache["attn"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, {"attn": new_attn}
+
+
+def _decode_attn(p, x, c, pos, cfg, window):
+    return attn_decode(p["attn"], norm_apply(p["norm1"], x, cfg.norm), c, pos,
+                       cfg, window=window)
+
+
+def _ssm_stack_decode(params, x1, cache, pos, cfg: ModelConfig, window):
+    period = cfg.hybrid_shared_period if cfg.family == "hybrid" else cfg.num_layers
+    L = cfg.num_layers
+    n_super = L // period
+    blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["blocks"])
+    ssm_cache = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), cache["ssm"])
+
+    def super_body(x, xs):
+        if cfg.family == "hybrid":
+            p_super, c_super, attn_c = xs
+        else:
+            p_super, c_super = xs
+            attn_c = None
+
+        def inner(x, pc):
+            p, c = pc
+            y, newc = ssm_decode_step(p["ssm"],
+                                      norm_apply(p["norm"], x, cfg.norm), c, cfg)
+            return x + y, newc
+        x, new_c = jax.lax.scan(inner, x, (p_super, c_super))
+        new_attn = None
+        if cfg.family == "hybrid":
+            sp = params["shared"]
+            a_out, new_attn = attn_decode(
+                sp["attn"], norm_apply(sp["norm1"], x, cfg.norm), attn_c, pos,
+                cfg, window=window if window is not None else cfg.sliding_window)
+            h = x + a_out
+            x = h + mlp_apply(sp["mlp"], norm_apply(sp["norm2"], h, cfg.norm), cfg)
+        return x, (new_c, new_attn)
+
+    if cfg.family == "hybrid":
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            super_body, x1, (blocks, ssm_cache, cache["shared_attn"]))
+    else:
+        x, (new_ssm, _) = jax.lax.scan(super_body, x1, (blocks, ssm_cache))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    new_cache = {"ssm": jax.tree_util.tree_map(
+        lambda a: a.reshape((L,) + a.shape[2:]), new_ssm)}
+    if cfg.family == "hybrid":
+        new_cache["shared_attn"] = new_attn
+    return x, new_cache

@@ -1,0 +1,17 @@
+"""Unified model interface over all architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` with a functional API:
+
+  params = model.init(rng)
+  h, aux = model.forward(params, batch)        # backbone hidden states
+  logits = model.logits(params, h)             # full softmax head (L2S screens this)
+  cache  = model.init_cache(batch, max_len)
+  h1, cache = model.decode_step(params, token, cache, pos)
+
+``batch`` is a dict:
+  text LMs:   {"tokens": (B, T) int32}
+  vlm:        {"tokens": (B, T), "patches": (B, P, d)}   (stub ViT frontend)
+  audio:      {"frames": (B, T, d)}                       (stub conv frontend)
+"""
+from repro.models.model import Model, build_model
+from repro.models.lm import cross_entropy_loss, train_loss

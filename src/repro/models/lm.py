@@ -1,0 +1,70 @@
+"""Training losses for the language models."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+def cross_entropy_loss(logits, labels, mask=None) -> jnp.ndarray:
+    """Token-level mean xent. logits (B, T, V) any float; labels (B, T) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(model: Model, params, batch: Dict[str, jnp.ndarray],
+               loss_chunk: int | None = None,
+               remat: bool = False) -> jnp.ndarray:
+    """Forward + next-token (or masked-prediction) loss.
+
+    ``loss_chunk``: if set, computes the vocab-logits + xent in sequence
+    chunks of this size so the full (B, T, V) logits tensor is never
+    materialized (perf/memory optimization; see EXPERIMENTS.md §Perf).
+    """
+    cfg = model.cfg
+    h, aux = model.forward(params, batch, remat=remat)
+    if cfg.family == "vlm":
+        # loss only over the text region
+        P = batch["patches"].shape[1]
+        h = h[:, P:]
+    if cfg.is_encoder:
+        labels = batch["labels"]            # frame-unit targets (masked pred)
+    else:
+        labels = batch["labels"]            # next-token targets
+    if loss_chunk is None:
+        logits = model.logits(params, h)
+        return cross_entropy_loss(logits, labels) + aux
+
+    B, T = labels.shape
+    if T % loss_chunk:
+        import math
+        loss_chunk = math.gcd(T, loss_chunk)   # e.g. vlm: 3840 text positions
+    if loss_chunk <= 1:
+        logits = model.logits(params, h)
+        return cross_entropy_loss(logits, labels) + aux
+    nchunk = T // loss_chunk
+    hc = h.reshape(B, nchunk, loss_chunk, -1)
+    lc = labels.reshape(B, nchunk, loss_chunk)
+
+    def body(acc, xs):
+        hi, li = xs
+        logits = model.logits(params, hi)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return total / (B * T) + aux

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWState
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.clip import clip_by_global_norm

@@ -1,0 +1,2 @@
+from repro.serving.engine import DecodeEngine, GenerationResult
+from repro.serving.sampling import greedy_next, screened_greedy_next

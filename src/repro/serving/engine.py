@@ -1,0 +1,153 @@
+"""Batched decode engine: prefill → token-by-token generation.
+
+Two head paths, switchable per request:
+  * exact: full-vocab softmax (the baseline the paper measures against)
+  * screened: L2S route + candidate-set softmax (the paper's technique)
+
+Beam search follows the paper's §4.2 protocol: log-softmax over the reduced
+candidate space, probability 0 (−inf log-prob) elsewhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.screening import ScreenParams
+from repro.models.model import Model
+from repro.serving.sampling import (greedy_next, screened_greedy_next,
+                                    screened_topk_logprobs, topk_logprobs)
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray              # (B, T_new) generated ids
+    scores: Optional[np.ndarray] = None
+    steps: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, model: Model, params, screen: Optional[ScreenParams] = None,
+                 max_len: int = 512, cache_dtype=jnp.float32,
+                 use_kernel: bool = False):
+        """``use_kernel``: route the screened head through the Pallas TPU
+        kernels (block-candidate screen required, ``screen.block == 128``) —
+        cluster_route + scalar-prefetch gather-matmul, interpret-mode on CPU.
+        """
+        self.model = model
+        self.params = params
+        self.screen = screen
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        W, b = model.softmax_weights(params)
+        self.W, self.b = W, b
+        self.use_kernel = use_kernel
+        if use_kernel:
+            from repro.kernels.ops import pack_head_blocks
+            assert screen is not None and screen.block == 128, \
+                "kernel path needs a 128-word block-candidate screen"
+            self._Wb, self._bb = pack_head_blocks(W, b)
+        self._jit_prefill = jax.jit(
+            lambda p, batch, cache: model.prefill(p, batch, cache))
+        self._jit_step_exact = jax.jit(self._step_exact)
+        self._jit_step_screen = jax.jit(self._step_screen)
+
+    # -- one-token steps (jitted) ------------------------------------------
+    def _step_exact(self, params, token, cache, pos):
+        h, cache = self.model.decode_step(params, token, cache, pos)
+        nxt = greedy_next(self.W, self.b, h)
+        return nxt, h, cache
+
+    def _step_screen(self, params, token, cache, pos):
+        h, cache = self.model.decode_step(params, token, cache, pos)
+        if self.use_kernel:
+            from repro.kernels.ops import screened_topk_tpu
+            ids, _ = screened_topk_tpu(self._Wb, self._bb, self.screen.v,
+                                       self.screen.cand_idx, h, k=1)
+            nxt = ids[:, 0].astype(jnp.int32)
+        else:
+            nxt = screened_greedy_next(self.W, self.b, self.screen, h)
+        return nxt, h, cache
+
+    # -- greedy generation ---------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 use_screen: bool = False) -> GenerationResult:
+        """prompts: (B, Tp) int32. Greedy decode of max_new tokens."""
+        B, Tp = prompts.shape
+        cache = self.model.init_cache(B, self.max_len, dtype=self.cache_dtype)
+        h, cache = self._jit_prefill(self.params, {"tokens": jnp.asarray(prompts)},
+                                     cache)
+        h_last = h[:, -1]
+        step = self._jit_step_screen if use_screen else self._jit_step_exact
+        if use_screen:
+            if self.use_kernel:
+                from repro.kernels.ops import screened_topk_tpu
+                ids, _ = screened_topk_tpu(self._Wb, self._bb, self.screen.v,
+                                           self.screen.cand_idx, h_last, k=1)
+                nxt = ids[:, 0].astype(jnp.int32)
+            else:
+                nxt = screened_greedy_next(self.W, self.b, self.screen, h_last)
+        else:
+            nxt = greedy_next(self.W, self.b, h_last)
+        out = [np.asarray(nxt)]
+        tok = nxt
+        for i in range(max_new - 1):
+            tok, h1, cache = step(self.params, tok, cache, Tp + i)
+            out.append(np.asarray(tok))
+        return GenerationResult(tokens=np.stack(out, axis=1), steps=max_new)
+
+    # -- beam search (batch of 1 prompt, beam B_w) -----------------------------
+    def beam_search(self, prompt: np.ndarray, beam: int, max_new: int,
+                    use_screen: bool = False) -> GenerationResult:
+        """prompt: (Tp,) int32. Returns the top beam's tokens and score."""
+        Tp = len(prompt)
+        prompts = np.broadcast_to(prompt[None], (beam, Tp)).copy()
+        cache = self.model.init_cache(beam, self.max_len, dtype=self.cache_dtype)
+        h, cache = self._jit_prefill(self.params,
+                                     {"tokens": jnp.asarray(prompts)}, cache)
+        h_last = h[:, -1]                                  # (beam, d)
+
+        lp_fn = (partial(screened_topk_logprobs, self.W, self.b, self.screen)
+                 if use_screen else partial(topk_logprobs, self.W, self.b))
+        lp_fn = jax.jit(lp_fn, static_argnames=("k",))
+
+        ids, lps = lp_fn(h_last[:1], k=beam)               # expand from beam 0
+        beam_tokens = [[int(ids[0, j])] for j in range(beam)]
+        beam_scores = np.asarray(lps[0], np.float64).copy()
+        tok = jnp.asarray(ids[0], jnp.int32)
+
+        step_fn = jax.jit(lambda p, t, c, pos: self.model.decode_step(p, t, c, pos))
+        for i in range(max_new - 1):
+            h1, cache = step_fn(self.params, tok, cache, Tp + i)
+            ids, lps = lp_fn(h1, k=beam)                   # (beam, beam)
+            total = beam_scores[:, None] + np.asarray(lps, np.float64)
+            flat = total.reshape(-1)
+            top = np.argsort(-flat)[:beam]
+            src, choice = np.unravel_index(top, total.shape)
+            beam_tokens = [beam_tokens[s] + [int(ids[s, c])]
+                           for s, c in zip(src, choice)]
+            beam_scores = flat[top]
+            tok = jnp.asarray([int(ids[s, c]) for s, c in zip(src, choice)],
+                              jnp.int32)
+            # reorder caches to follow the surviving beams
+            src_idx = jnp.asarray(src, jnp.int32)
+            cache = _reorder_cache(cache, src_idx, self.model.cfg)
+
+        best = int(np.argmax(beam_scores))
+        return GenerationResult(tokens=np.asarray(beam_tokens[best])[None],
+                                scores=beam_scores[best:best + 1],
+                                steps=max_new)
+
+
+def _reorder_cache(cache, src_idx, cfg):
+    """Gather beam rows. Batch axis position differs per cache kind:
+    attention/ssm caches are stacked per layer → batch is axis 1; LSTM state
+    lists carry batch at axis 0."""
+    if cfg.family == "lstm":
+        return {"lstm": [{k: v[src_idx] for k, v in layer.items()}
+                         for layer in cache["lstm"]]}
+    return jax.tree_util.tree_map(lambda a: a[:, src_idx], cache)

@@ -1,0 +1,2 @@
+from repro.utils.pytree import tree_size, tree_bytes, tree_norm, cast_tree
+from repro.utils.timing import Timer, bench_wall

@@ -1,0 +1,34 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of parameters in a pytree."""
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (by dtype itemsize)."""
+    return int(
+        sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_norm(tree) -> jax.Array:
+    """Global L2 norm of a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def cast_tree(tree, dtype):
+    """Cast all floating-point leaves of a pytree to ``dtype``."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)

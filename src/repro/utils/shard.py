@@ -1,0 +1,77 @@
+"""Activation sharding constraints against the ambient mesh.
+
+GSPMD's propagation can lose the batch sharding through remat + scan
+boundaries and silently replicate activations (observed: per-device FLOPs ==
+global FLOPs on the 16×16 mesh — see EXPERIMENTS.md §Perf). Production
+frameworks pin activations at block boundaries; ``shard_batch`` is that pin.
+It is a no-op outside a mesh context, so single-device smoke tests and CPU
+benchmarks are unaffected.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def ambient_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:                      # fallback for other jax versions
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def data_axis_names(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size() -> int:
+    """Size of the 'model' axis of the ambient mesh (1 if none)."""
+    m = ambient_mesh()
+    if m is None or "model" not in m.axis_names:
+        return 1
+    return int(m.shape["model"])
+
+
+def shard_axis(x, axis: int, name: str = "model", keep_batch: bool = True):
+    """Constrain one axis of x over a named mesh axis (no-op without a mesh
+    or when non-divisible). Used by the sequence-parallel attention path.
+
+    ``keep_batch``: also pin axis 0 to the data axes — a PartitionSpec's
+    ``None`` dims mean REPLICATED, so omitting the batch pin would force an
+    all-gather of the batch dim (observed: 4 TB of phantom gathers in HC2
+    iteration 1, EXPERIMENTS.md §Perf)."""
+    m = ambient_mesh()
+    if m is None or name not in m.axis_names:
+        return x
+    if x.shape[axis] % int(m.shape[name]) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = name
+    if keep_batch and axis != 0:
+        daxes = data_axis_names(m)
+        dsize = int(np.prod([m.shape[a] for a in daxes]))
+        if daxes and x.shape[0] > 1 and x.shape[0] % dsize == 0:
+            spec[0] = daxes if len(daxes) > 1 else daxes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_batch(x, batch_axis: int = 0):
+    """Constrain x's batch dim over the mesh's data axes (no-op if no mesh,
+    no data axes, or non-divisible/trivial batch)."""
+    m = ambient_mesh()
+    if m is None:
+        return x
+    daxes = data_axis_names(m)
+    if not daxes:
+        return x
+    dsize = int(np.prod([m.shape[a] for a in daxes]))
+    if x.shape[batch_axis] <= 1 or x.shape[batch_axis] % dsize != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_axis] = daxes if len(daxes) > 1 else daxes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,35 @@
+"""Wall-clock timing helpers for CPU benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+class Timer:
+    """Context-manager wall timer: ``with Timer() as t: ...; t.ms``."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.t1 = time.perf_counter()
+        self.s = self.t1 - self.t0
+        self.ms = self.s * 1e3
+        self.us = self.s * 1e6
+        return False
+
+
+def bench_wall(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Return median wall seconds per call of ``fn(*args)`` (blocks on jax outputs)."""
+    times = []
+    for i in range(warmup + iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t1 = time.perf_counter()
+        if i >= warmup:
+            times.append(t1 - t0)
+    times.sort()
+    return times[len(times) // 2]

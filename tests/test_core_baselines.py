@@ -1,0 +1,73 @@
+"""MIPS/softmax baselines: exactness limits and sanity."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (AdaptiveShortlist, GreedyMIPS, LSHMIPS,
+                                  PCAMIPS, SVDSoftmax)
+from repro.core.evaluate import precision_at_k
+
+L, D, N = 300, 24, 40
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((L, D)).astype(np.float32)
+    b = rng.standard_normal(L).astype(np.float32) * 0.1
+    H = rng.standard_normal((N, D)).astype(np.float32)
+    exact = np.argsort(-(H @ W.T + b), axis=1)[:, :5]
+    return W, b, H, exact
+
+
+def test_svd_softmax_exact_at_full_rank(setup):
+    W, b, H, exact = setup
+    svd = SVDSoftmax.build(W, b, rho=D, n_top=L)
+    got = svd.topk(H, 5)
+    assert precision_at_k(got, exact) == 1.0
+
+
+def test_svd_softmax_tradeoff(setup):
+    W, b, H, exact = setup
+    lo = SVDSoftmax.build(W, b, rho=4, n_top=20)
+    hi = SVDSoftmax.build(W, b, rho=16, n_top=60)
+    p_lo = precision_at_k(lo.topk(H, 5), exact)
+    p_hi = precision_at_k(hi.topk(H, 5), exact)
+    assert p_hi >= p_lo
+    assert lo.flops_per_query < L * D      # actually cheaper than exact
+
+
+def test_adaptive_shortlist():
+    """With a frequency-skewed head (large-norm early rows — the structure
+    adaptive-softmax exploits), the shortlist recovers most of the top-k."""
+    rng = np.random.default_rng(1)
+    W = rng.standard_normal((L, D)).astype(np.float32)
+    W[:100] *= 3.0                          # "frequent" words dominate logits
+    b = np.zeros(L, np.float32)
+    H = rng.standard_normal((N, D)).astype(np.float32)
+    exact = np.argsort(-(H @ W.T + b), axis=1)[:, :5]
+    ada = AdaptiveShortlist.build(W, b, np.arange(L), n_head=100, n_tails=4)
+    p = precision_at_k(ada.topk(H, 5), exact)
+    assert p > 0.8, p
+
+
+def test_greedy_mips_budget(setup):
+    W, b, H, exact = setup
+    g_small = GreedyMIPS.build(W, b, budget=64)
+    g_big = GreedyMIPS.build(W, b, budget=1024)
+    p_small = precision_at_k(g_small.topk(H, 5), exact)
+    p_big = precision_at_k(g_big.topk(H, 5), exact)
+    assert p_big >= p_small
+
+
+def test_lsh_and_pca_return_valid_ids(setup):
+    W, b, H, exact = setup
+    lsh = LSHMIPS.build(W, b, bands=6, bits=6)
+    got = lsh.topk(H, 5)
+    assert got.shape == (N, 5)
+    assert got.max() < L
+    pca = PCAMIPS.build(W, b, depth=4)
+    got2 = pca.topk(H, 5)
+    assert got2.shape == (N, 5) and got2.max() < L
+    # leaves partition the database
+    total = sum(len(v) for v in pca.leaves.values())
+    assert total == L

@@ -1,0 +1,175 @@
+"""L2S core tests: Gumbel-ST, spherical k-means, knapsack (vs brute force),
+screening contracts, and the full Algorithm 1 (end-to-end > random clusters).
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import L2SConfig
+from repro.core import (ScreenParams, assign_clusters, candidate_stats,
+                        fit_l2s, greedy_knapsack, gumbel_softmax_st,
+                        precision_at_k, screened_topk, spherical_kmeans)
+from repro.core.evaluate import exact_topk, screened_predictions
+from repro.core.screening import candidates_to_padded
+from repro.core.train_l2s import kmeans_only_screen
+
+
+def test_gumbel_st_one_hot_and_grads():
+    logits = jnp.asarray([[2.0, 1.0, -1.0], [0.0, 0.0, 0.0]])
+    p_bar, p_soft = gumbel_softmax_st(jax.random.key(0), logits)
+    np.testing.assert_allclose(np.asarray(jnp.sum(p_bar, -1)), 1.0, atol=1e-6)
+    assert np.all(np.isin(np.asarray(p_bar), [0.0, 1.0]) |
+                  (np.abs(np.asarray(p_bar)) < 1e-6) |
+                  (np.abs(np.asarray(p_bar) - 1) < 1e-6))
+
+    # gradient flows through the soft path
+    def f(lg):
+        pb, _ = gumbel_softmax_st(jax.random.key(0), lg)
+        return jnp.sum(pb * jnp.asarray([1.0, 2.0, 3.0]))
+    g = jax.grad(f)(logits)
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_gumbel_samples_follow_distribution():
+    logits = jnp.log(jnp.asarray([[0.7, 0.2, 0.1]]))
+    keys = jax.random.split(jax.random.key(1), 500)
+    picks = jax.vmap(lambda k: jnp.argmax(
+        gumbel_softmax_st(k, logits)[0], -1)[0])(keys)
+    frac0 = float(jnp.mean((picks == 0).astype(jnp.float32)))
+    assert 0.6 < frac0 < 0.8
+
+
+def test_spherical_kmeans_clusters_separable_data():
+    rng = np.random.default_rng(0)
+    centers = np.eye(8)[:3] * 10            # orthogonal, widely separated
+    X = np.concatenate([centers[i] + 0.05 * rng.standard_normal((50, 8))
+                        for i in range(3)])
+    got = spherical_kmeans(jax.random.key(0), jnp.asarray(X, jnp.float32), 3)
+    assign = np.asarray(assign_clusters(got, jnp.asarray(X, jnp.float32)))
+    # each true cluster maps to exactly one learned cluster
+    for i in range(3):
+        seg = assign[i * 50:(i + 1) * 50]
+        assert len(np.unique(seg)) == 1
+    assert len(np.unique(assign)) == 3
+    # unit norm centers
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(got, axis=-1)),
+                               1.0, atol=1e-4)
+
+
+def _brute_force_knapsack(counts, csizes, N, budget, lamb):
+    r, n = counts.shape
+    best_val, best_mask = 0.0, np.zeros((r, n), bool)
+    items = list(itertools.product(range(r), range(n)))
+    for bits in range(2 ** len(items)):
+        mask = np.zeros((r, n), bool)
+        for idx, (t, s) in enumerate(items):
+            if bits >> idx & 1:
+                mask[t, s] = True
+        w = sum(csizes[t] / N for t, s in items if mask[t, s])
+        if w > budget:
+            continue
+        val = sum(counts[t, s] - lamb * (csizes[t] - counts[t, s])
+                  for t, s in items if mask[t, s])
+        if val > best_val:
+            best_val, best_mask = val, mask
+    return best_val, best_mask
+
+
+def test_knapsack_budget_respected():
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 50, (5, 40)).astype(np.float64)
+    csizes = rng.integers(1, 30, 5).astype(np.float64)
+    N = int(csizes.sum())
+    mask = greedy_knapsack(counts, csizes, N, budget=10.0, lamb=3e-4, L=40)
+    weight = (mask * (csizes[:, None] / N)).sum()
+    assert weight <= 10.0 + 1e-9
+    # only positive-value items selected
+    value = counts - 3e-4 * (csizes[:, None] - counts)
+    assert np.all(value[mask] > 0)
+
+
+def test_knapsack_near_optimal_small():
+    """Greedy ratio ≥ 80% of brute-force optimum on tiny instances."""
+    rng = np.random.default_rng(1)
+    counts = rng.integers(0, 10, (2, 6)).astype(np.float64)
+    csizes = np.array([5.0, 7.0])
+    N = 12
+    lamb = 0.01
+    mask = greedy_knapsack(counts, csizes, N, budget=2.0, lamb=lamb, L=6)
+    val = ((counts - lamb * (csizes[:, None] - counts)) * mask).sum()
+    opt, _ = _brute_force_knapsack(counts, csizes, N, 2.0, lamb)
+    assert val >= 0.8 * opt
+
+
+def test_candidate_stats():
+    assign = np.array([0, 0, 1])
+    topk = np.array([[1, 2], [1, 3], [0, 1]])
+    counts, sizes = candidate_stats(assign, topk, r=2, L=5)
+    assert counts[0, 1] == 2 and counts[0, 2] == 1 and counts[1, 1] == 1
+    assert sizes.tolist() == [2.0, 1.0]
+    # block granularity: words {0,1} → block 0, {2,3} → block 1
+    cb, _ = candidate_stats(assign, topk, r=2, L=5, block=2)
+    assert cb[0, 0] == 2 and cb[0, 1] == 2
+
+
+def test_screened_topk_contract():
+    rng = np.random.default_rng(0)
+    L, d, r = 64, 8, 4
+    W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
+    b = jnp.zeros((L,), jnp.float32)
+    mask = np.zeros((r, L), bool)
+    mask[:, :16] = True               # every cluster: words 0..15
+    idx, lens = candidates_to_padded(mask, L)
+    sp = ScreenParams(v=jnp.asarray(rng.standard_normal((r, d)), jnp.float32),
+                      cand_idx=jnp.asarray(idx), cand_len=jnp.asarray(lens),
+                      vocab_size=L)
+    h = jnp.asarray(rng.standard_normal((5, d)), jnp.float32)
+    ids, vals = screened_topk(W, b, sp, h, k=3)
+    assert ids.shape == (5, 3)
+    assert int(ids.max()) < 16         # only candidate words can win
+    # equals exact top-k restricted to the candidate set
+    ref = np.asarray(jnp.argsort(-(h @ W[:16].T), axis=-1))[:, :3]
+    np.testing.assert_array_equal(np.asarray(ids), ref)
+
+
+def test_fit_l2s_beats_random_clusters():
+    """Algorithm 1 on structured contexts: precision@5 ≫ random clustering
+    with the same budget."""
+    rng = np.random.default_rng(0)
+    L, d, N = 200, 16, 4000
+    # structured contexts: 8 latent modes, each with its own top-word set
+    modes = rng.standard_normal((8, d)).astype(np.float32) * 3
+    W = rng.standard_normal((L, d)).astype(np.float32)
+    mode_of = rng.integers(0, 8, N)
+    H = (modes[mode_of] + 0.3 * rng.standard_normal((N, d))).astype(np.float32)
+    logits = H @ W.T
+    y = np.argsort(-logits, axis=1)[:, :5].astype(np.int32)
+
+    cfg = L2SConfig(num_clusters=8, budget=30, outer_iters=2, sgd_steps=150)
+    state = fit_l2s(H, y, L, cfg)
+    Wd, bd = jnp.asarray(W), jnp.zeros((L,), jnp.float32)
+    pred = screened_predictions(Wd, bd, state.screen, H, 5)
+    p5 = precision_at_k(pred, y)
+    assert p5 > 0.9, p5
+
+    # random clustering + same knapsack budget
+    rand_state = kmeans_only_screen(
+        rng.standard_normal((N, d)).astype(np.float32), y, L, cfg)
+    rand_state.screen.v = jnp.asarray(
+        rng.standard_normal((8, d)), jnp.float32)   # random v
+    pred_r = screened_predictions(Wd, bd, rand_state.screen, H, 5)
+    p5_r = precision_at_k(pred_r, y)
+    assert p5 > p5_r + 0.05, (p5, p5_r)
+
+
+def test_block_candidates_roundtrip():
+    mask = np.zeros((2, 10), bool)
+    mask[0, [1, 3]] = True
+    mask[1, [0]] = True
+    idx, lens = candidates_to_padded(mask, vocab_size=1280, block=128)
+    assert lens.tolist() == [2, 1]
+    assert idx[0, 0] == 1 and idx[0, 1] == 3 and idx[1, 0] == 0
+    assert idx[0, 2] == 10      # sentinel = n_items

@@ -1,0 +1,98 @@
+"""Norms, RoPE/M-RoPE, LSTM, embeddings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.layers.lstm import _cell, lstm_forward, lstm_init, lstm_init_state
+from repro.layers.norms import layernorm, norm_init, rmsnorm
+from repro.layers.rope import apply_mrope, apply_rope, mrope_positions, rope_freqs
+
+
+def test_rmsnorm_scale_invariance_direction():
+    p = norm_init(16, "rmsnorm")
+    x = jax.random.normal(jax.random.key(0), (4, 16))
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, x * 10.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    # unit RMS
+    rms = jnp.sqrt(jnp.mean(jnp.square(y1), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_layernorm_moments():
+    p = norm_init(32, "layernorm")
+    x = jax.random.normal(jax.random.key(0), (4, 32)) * 5 + 3
+    y = layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+
+
+def test_rope_norm_preserving():
+    x = jax.random.normal(jax.random.key(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """q(pos a)·k(pos b) must depend only on (a−b)."""
+    d = 16
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, d))
+
+    def dot_at(pa, pb):
+        qa = apply_rope(q, jnp.full((1, 1), pa))
+        kb = apply_rope(k, jnp.full((1, 1), pb))
+        return float(jnp.sum(qa * kb))
+
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-5
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Equal (t,h,w) components == standard RoPE at that position."""
+    x = jax.random.normal(jax.random.key(0), (1, 4, 2, 16))
+    pos = jnp.arange(4)[None]
+    p3 = jnp.broadcast_to(pos[..., None], (1, 4, 3))
+    np.testing.assert_allclose(np.asarray(apply_mrope(x, p3)),
+                               np.asarray(apply_rope(x, pos)), atol=1e-5)
+
+
+def test_mrope_positions_layout():
+    pos = mrope_positions(2, 4, 6)      # 2×2 grid + 6 text
+    assert pos.shape == (2, 10, 3)
+    # patches have t = 0
+    assert int(jnp.max(pos[:, :4, 0])) == 0
+    # text components are equal
+    assert bool(jnp.all(pos[:, 4:, 0] == pos[:, 4:, 1]))
+
+
+def test_lstm_cell_manual():
+    cfg = get_config("ptb-small-lstm").reduced()
+    p = lstm_init(jax.random.key(0), cfg, jnp.float32)["layers"][0]
+    x = jax.random.normal(jax.random.key(1), (3, cfg.d_model))
+    h = jnp.zeros((3, cfg.d_model))
+    c = jnp.zeros((3, cfg.d_model))
+    h2, c2 = _cell(p, x, h, c)
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = np.split(np.asarray(gates), 4, axis=-1)
+    sig = lambda v: 1 / (1 + np.exp(-v))
+    c_ref = sig(f) * np.asarray(c) + sig(i) * np.tanh(g)
+    h_ref = sig(o) * np.tanh(c_ref)
+    np.testing.assert_allclose(np.asarray(h2), h_ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c2), c_ref, atol=1e-5)
+
+
+def test_lstm_stateful_continuation():
+    cfg = get_config("ptb-small-lstm").reduced()
+    params = lstm_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 10, cfg.d_model))
+    full, _ = lstm_forward({"layers": params["layers"]}, x, cfg)
+    h1, st = lstm_forward({"layers": params["layers"]}, x[:, :6], cfg)
+    h2, _ = lstm_forward({"layers": params["layers"]}, x[:, 6:], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([h1, h2], 1)),
+                               atol=1e-5)

@@ -1,0 +1,121 @@
+"""Optimizer (vs numpy reference), schedules, clipping, checkpoint roundtrip,
+synthetic data properties, loader specs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import INPUT_SHAPES, get_config
+from repro.data import ZipfMarkovCorpus, input_specs, make_lm_batches
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, linear_warmup)
+
+
+def test_adamw_matches_numpy_reference():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.01
+    p2, st2 = adamw_update(g, st, p, lr, b1, b2, eps, wd)
+    m = (1 - b1) * np.asarray(g["w"])
+    v = (1 - b2) * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    ref = np.asarray(p["w"]) - lr * (mhat / (np.sqrt(vhat) + eps)
+                                     + wd * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, atol=1e-6)
+    assert int(st2.step) == 1
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw_init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st = adamw_update(g, st, p, 0.05, weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.05
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}          # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, atol=1e-5)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, atol=1e-4)
+    # under the limit → unchanged
+    g2, _ = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(g2["a"]), np.asarray(g["a"]))
+
+
+def test_schedules():
+    s = jnp.asarray(0)
+    assert float(linear_warmup(s, 1.0, 10)) == 0.0
+    assert float(linear_warmup(jnp.asarray(10), 1.0, 10)) == 1.0
+    lr_mid = float(cosine_schedule(jnp.asarray(500), 1.0, 100, 1000))
+    lr_end = float(cosine_schedule(jnp.asarray(1000), 1.0, 100, 1000))
+    assert 0.0 < lr_end < lr_mid < 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": [jnp.ones((4,)), {"c": jnp.asarray(2)}]}
+    save_checkpoint(str(tmp_path), 7, tree, {"note": "x", "step": 7})
+    assert latest_step(str(tmp_path)) == 7
+    got, meta = load_checkpoint(str(tmp_path), tree)
+    assert meta["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    tree = {"a": jnp.ones((2, 3))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"a": jnp.ones((3, 3))})
+
+
+def test_corpus_concentration():
+    """Successor distributions concentrate — the property L2S exploits."""
+    c = ZipfMarkovCorpus(500, branching=32, seed=0)
+    # top-8 successors of any context carry most of the mass
+    top8 = np.sort(c.probs, axis=1)[:, -8:].sum(axis=1)
+    assert top8.mean() > 0.75
+    seq = c.sample(2000, seed=1)
+    assert seq.min() >= 0 and seq.max() < 500
+    # batched sampler matches the alphabet & shape
+    batch = c.sample_batch(4, 64, seed=2)
+    assert batch.shape == (4, 64) and batch.max() < 500
+
+
+def test_lm_batches():
+    c = ZipfMarkovCorpus(100, branching=16, seed=0)
+    b = next(iter(make_lm_batches(c, 1, 4, 32)))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "hubert-xlarge", "qwen2-vl-2b",
+                                  "mamba2-1.3b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    if shape == "decode_32k" and not cfg.supports_decode:
+        return
+    specs = input_specs(cfg, shape)
+    sc = INPUT_SHAPES[shape]
+    if sc.kind == "train":
+        if cfg.family == "audio":
+            assert specs["frames"].shape == (sc.global_batch, sc.seq_len,
+                                             cfg.d_model)
+        elif cfg.family == "vlm":
+            assert specs["patches"].shape[1] == cfg.num_patch_tokens
+            assert (specs["tokens"].shape[1] + cfg.num_patch_tokens
+                    == sc.seq_len)
+        else:
+            assert specs["tokens"].shape == (sc.global_batch, sc.seq_len)
+    else:
+        assert specs["token"].shape == (sc.global_batch,)
+        assert specs["pos"].shape == ()

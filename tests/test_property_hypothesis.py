@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gumbel import gumbel_softmax_st
+from repro.core.knapsack import greedy_knapsack
+from repro.core.screening import (ScreenParams, assign_clusters,
+                                  candidates_to_padded, screened_topk)
+from repro.core.evaluate import precision_at_k
+from repro.launch.hlo_cost import _shape_elems_bytes
+from repro.layers.rope import apply_rope
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 6), st.integers(5, 30), st.floats(0.5, 20.0),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_knapsack_invariants(r, n, budget, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 20, (r, n)).astype(np.float64)
+    csizes = rng.integers(1, 20, r).astype(np.float64)
+    N = int(csizes.sum())
+    mask = greedy_knapsack(counts, csizes, N, budget, lamb=1e-3, L=n)
+    # budget respected
+    assert (mask * (csizes[:, None] / N)).sum() <= budget + 1e-9
+    # monotonicity: doubling the budget never removes items' total value
+    mask2 = greedy_knapsack(counts, csizes, N, 2 * budget, lamb=1e-3, L=n)
+    val = lambda m: ((counts - 1e-3 * (csizes[:, None] - counts)) * m).sum()
+    assert val(mask2) >= val(mask) - 1e-9
+
+
+@given(st.integers(1, 8), st.integers(2, 20), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_gumbel_st_always_one_hot(batch, r, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((batch, r)), jnp.float32)
+    p_bar, _ = gumbel_softmax_st(jax.random.key(seed), logits)
+    arr = np.asarray(p_bar)
+    np.testing.assert_allclose(arr.sum(-1), 1.0, atol=1e-5)
+    assert ((np.abs(arr) < 1e-5) | (np.abs(arr - 1) < 1e-5)).all()
+
+
+@given(st.integers(8, 64), st.integers(2, 5), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_screened_ids_within_candidates(L, r, seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
+    b = jnp.zeros((L,), jnp.float32)
+    mask = rng.random((r, L)) < 0.3
+    mask[:, 0] = True                      # never-empty candidate sets
+    idx, lens = candidates_to_padded(mask, L)
+    sp = ScreenParams(v=jnp.asarray(rng.standard_normal((r, d)), jnp.float32),
+                      cand_idx=jnp.asarray(idx), cand_len=jnp.asarray(lens),
+                      vocab_size=L)
+    h = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+    ids, _ = screened_topk(W, b, sp, h, k=3)
+    cl = np.asarray(assign_clusters(sp.v, h))
+    for i in range(4):
+        allowed = set(np.nonzero(mask[cl[i]])[0].tolist()) | {L}
+        assert set(np.asarray(ids)[i].tolist()) <= allowed
+
+
+@given(st.integers(1, 50), st.integers(1, 5), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_precision_bounds_and_identity(n, k, seed):
+    rng = np.random.default_rng(seed)
+    exact = np.stack([rng.permutation(1000)[:k] for _ in range(n)])
+    assert precision_at_k(exact, exact) == 1.0
+    approx = exact + 1000                        # disjoint ids
+    assert precision_at_k(approx, exact) == 0.0
+    mixed = exact.copy()
+    mixed[:, 0] = 5000
+    p = precision_at_k(mixed, exact)
+    assert 0.0 <= p <= 1.0
+
+
+@given(st.integers(1, 3), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_rope_norm_preservation(B, T, H, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, T, H, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+
+
+@given(st.lists(st.sampled_from(["f32", "bf16", "s32", "pred"]), min_size=1,
+                max_size=3),
+       st.lists(st.integers(1, 64), min_size=0, max_size=3))
+@settings(**SETTINGS)
+def test_hlo_shape_parser(dtypes, dims):
+    dim_s = ",".join(str(d) for d in dims)
+    text = " ".join(f"{dt}[{dim_s}]" for dt in dtypes)
+    elems, byts = _shape_elems_bytes(text)
+    per = int(np.prod(dims)) if dims else 1
+    assert elems == per * len(dtypes)
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}
+    assert byts == sum(per * sizes[dt] for dt in dtypes)
