@@ -115,3 +115,27 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def head_context(W, b, screen=None, **extra):
+    """The kwargs dict that builds any registered head via heads.get(name,
+    **ctx) — the single construction context benchmarks share."""
+    ctx = {"W": W, "b": b, **extra}
+    if screen is not None:
+        ctx["screen"] = screen
+    return ctx
+
+
+def time_head_per_query(head, H, k: int, n_time: int = 400,
+                        warmup: int = 3) -> float:
+    """Paper timing protocol: ONE query at a time, wall seconds per query
+    through ``head.topk`` (numpy heads run on host; identical per-op
+    overheads across methods). Warmup absorbs jit compilation and each
+    result is materialized (np.asarray blocks on device arrays) so
+    jax-backed heads don't time async dispatch."""
+    for i in range(warmup):
+        np.asarray(head.topk(H[i:i + 1], k)[0])
+    t0 = time.perf_counter()
+    for i in range(n_time):
+        np.asarray(head.topk(H[i:i + 1], k)[0])
+    return (time.perf_counter() - t0) / n_time

@@ -35,11 +35,11 @@ def run():
         for i in range(N_PROMPTS):
             t0 = time.perf_counter()
             ref = engine.beam_search(prompts[i], beam, MAX_NEW,
-                                     use_screen=False)
+                                     head="exact")
             t_full += time.perf_counter() - t0
             t0 = time.perf_counter()
             got = engine.beam_search(prompts[i], beam, MAX_NEW,
-                                     use_screen=True)
+                                     head="screened")
             t_l2s += time.perf_counter() - t0
             agree = float((ref.tokens[0] == got.tokens[0]).mean())
             tok_agree.append(agree)

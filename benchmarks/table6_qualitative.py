@@ -29,9 +29,9 @@ def run():
     same = 0
     for i in range(N_SAMPLES):
         ref = engine.beam_search(prompts[i], beam=5, max_new=MAX_NEW,
-                                 use_screen=False)
+                                 head="exact")
         got = engine.beam_search(prompts[i], beam=5, max_new=MAX_NEW,
-                                 use_screen=True)
+                                 head="screened")
         a, bseq = ref.tokens[0], got.tokens[0]
         marks = "".join("·" if x == y else "X" for x, y in zip(a, bseq))
         agree = float((a == bseq).mean())

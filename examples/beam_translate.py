@@ -48,10 +48,10 @@ for beam in (1, 5):
     agree, t_full, t_l2s = [], 0.0, 0.0
     for i in range(len(prompts)):
         t0 = time.perf_counter()
-        ref = engine.beam_search(prompts[i], beam, 20, use_screen=False)
+        ref = engine.beam_search(prompts[i], beam, 20, head="exact")
         t_full += time.perf_counter() - t0
         t0 = time.perf_counter()
-        got = engine.beam_search(prompts[i], beam, 20, use_screen=True)
+        got = engine.beam_search(prompts[i], beam, 20, head="screened")
         t_l2s += time.perf_counter() - t0
         agree.append(float((ref.tokens[0] == got.tokens[0]).mean()))
     print(f"beam={beam}: token agreement {np.mean(agree):.3f}, "

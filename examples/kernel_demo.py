@@ -1,14 +1,15 @@
 """Pallas kernel demo: the TPU-adapted screened softmax hot path
-(cluster_route → scalar-prefetch block gather-matmul → subset top-k),
-validated against the pure-jnp reference in interpret mode.
+(cluster_route → scalar-prefetch block gather-matmul → subset top-k) behind
+the ``SoftmaxHead`` protocol, validated against the pure-jnp reference head
+in interpret mode.
 
 Run: PYTHONPATH=src python examples/kernel_demo.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.screening import ScreenParams, screened_topk
-from repro.kernels.ops import pack_head_blocks, screened_topk_tpu
+from repro import heads
+from repro.core.screening import ScreenParams
 from repro.kernels.ref import cluster_route_ref
 from repro.kernels.route import cluster_route_pallas
 
@@ -18,22 +19,27 @@ print(f"softmax head: vocab={L}, d={d} | screen: r={r}, {K} blocks/cluster")
 
 W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
 b = jnp.asarray(rng.standard_normal((L,)) * 0.1, jnp.float32)
-Wb, bb = pack_head_blocks(W, b)                  # (128, 128, 512) MXU tiles
-print(f"packed head: {Wb.shape} — {Wb.nbytes/1e6:.0f} MB in vocab blocks")
-
 v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
-cand = jnp.asarray(rng.integers(0, Wb.shape[0], (r, K)), jnp.int32)
+cand = jnp.asarray(rng.integers(0, -(-L // 128), (r, K)), jnp.int32)
 h = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
-
-ids, vals = screened_topk_tpu(Wb, bb, v, cand, h, k=5)     # kernels (interpret)
-route = cluster_route_pallas(h, v)
-assert bool(jnp.all(route == cluster_route_ref(h, v)))
-
 sp = ScreenParams(v=v, cand_idx=cand,
                   cand_len=jnp.full((r,), K, jnp.int32), vocab_size=L,
                   block=128)
-ids_ref, vals_ref = screened_topk(W, b, sp, h, 5)          # pure jnp
-assert bool(jnp.all(ids == ids_ref)), "kernel != reference"
-print("kernel path == jnp reference on all", B, "queries  ✓")
-print("per-query compute: full softmax", L * d, "MACs vs screened",
-      r * d + K * 128 * d, f"MACs  ({L * d / (r * d + K * 128 * d):.1f}x fewer)")
+
+# one registry, two backends over the same screen
+kern = heads.get("screened-pallas", W=W, b=b, screen=sp)   # interpret on CPU
+ref = heads.get("screened", W=W, b=b, screen=sp)           # pure jnp
+print(f"packed head: {kern.packed_shape} — {kern.packed_nbytes/1e6:.0f} MB "
+      "in MXU vocab blocks (prepare() ran once)")
+
+ids, vals = kern.topk(h, 5)
+route = cluster_route_pallas(h, v)
+assert bool(jnp.all(route == cluster_route_ref(h, v)))
+
+ids_ref, vals_ref = ref.topk(h, 5)
+assert bool(jnp.all(ids == ids_ref)), "kernel head != reference head"
+print("kernel head == jnp reference head on all", B, "queries  ✓")
+print("per-query compute (flops_per_query): full softmax",
+      f"{heads.get('exact', W=W, b=b).flops_per_query:.0f}",
+      "vs screened", f"{kern.flops_per_query:.0f}",
+      f"({heads.get('exact', W=W, b=b).flops_per_query / kern.flops_per_query:.1f}x fewer)")

@@ -14,11 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import heads
 from repro.configs import L2SConfig, TrainConfig, get_config
 from repro.core import collect_contexts, fit_l2s, precision_at_k
 from repro.core.evaluate import (avg_candidate_size, exact_topk,
                                  speedup_model)
-from repro.core.screening import make_screen_fn
 from repro.data import ZipfMarkovCorpus, make_lm_batches
 from repro.launch.steps import make_train_step
 from repro.models import build_model
@@ -58,25 +58,26 @@ state = fit_l2s(Htr, y[:25_000], VOCAB,
                           sgd_steps=200), verbose=True)
 print(f"L2S fitted in {time.time() - t0:.0f}s")
 
-# ---- 4. evaluate ------------------------------------------------------------
+# ---- 4. evaluate (decode heads from the registry) ---------------------------
 W, b = model.softmax_weights(params)
-fn = make_screen_fn(W, b, state.screen, k=5)
+head = heads.get("screened", W=W, b=b, screen=state.screen)
 ex = exact_topk(W, b, jnp.asarray(Hte), 5)
-pred = np.asarray(fn(jnp.asarray(Hte))[0])
+pred = np.asarray(head.topk(jnp.asarray(Hte), 5)[0])
 p1 = precision_at_k(pred[:, :1], ex[:, :1])
 p5 = precision_at_k(pred, ex)
 lbar = avg_candidate_size(state.screen, Hte)
 
 hq = jnp.asarray(Hte[:256])
-@jax.jit
-def full_topk(h):
-    return jax.lax.top_k(jnp.einsum("bd,vd->bv", h, W) + b, 5)[1]
-for f in (full_topk, fn):           # warmup
-    jax.block_until_ready(f(hq))
-t0 = time.perf_counter(); jax.block_until_ready(full_topk(hq)); t_full = time.perf_counter() - t0
-t0 = time.perf_counter(); jax.block_until_ready(fn(hq)[0]); t_l2s = time.perf_counter() - t0
+exact_head = heads.get("exact", W=W, b=b)
+for hd in (exact_head, head):       # warmup
+    jax.block_until_ready(hd.topk(hq, 5)[0])
+t0 = time.perf_counter(); jax.block_until_ready(exact_head.topk(hq, 5)[0]); t_full = time.perf_counter() - t0
+t0 = time.perf_counter(); jax.block_until_ready(head.topk(hq, 5)[0]); t_l2s = time.perf_counter() - t0
 
 print(f"\nP@1={p1:.3f}  P@5={p5:.3f}  L̄={lbar:.0f} words "
       f"(budget 150, vocab {VOCAB})")
 print(f"measured speedup {t_full / t_l2s:.1f}x | analytic O(L·d)/O((r+L̄)·d) "
       f"= {speedup_model(VOCAB, D, 100, lbar):.1f}x")
+print(f"head cost models (flops/query): "
+      f"exact={exact_head.flops_per_query:.0f} "
+      f"screened={head.flops_per_query:.0f}")

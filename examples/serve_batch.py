@@ -45,18 +45,25 @@ engine = DecodeEngine(model, params, screen=state.screen,
                       max_len=16 + NEW)
 
 requests = corpus.sample_batch(BATCH, 16, seed=11)
-# warmup compiles
-engine.generate(requests, 2, use_screen=False)
-engine.generate(requests, 2, use_screen=True)
+# warmup compiles — heads are resolved by name and switchable per request
+engine.generate(requests, 2, head="exact")
+engine.generate(requests, 2, head="screened")
 
 t0 = time.perf_counter()
-exact = engine.generate(requests, NEW, use_screen=False)
+exact = engine.generate(requests, NEW, head="exact")
 t_exact = time.perf_counter() - t0
 t0 = time.perf_counter()
-fast = engine.generate(requests, NEW, use_screen=True)
+fast = engine.generate(requests, NEW, head="screened")
 t_fast = time.perf_counter() - t0
 
 agree = float((exact.tokens == fast.tokens).mean())
 print(f"exact softmax : {BATCH * NEW / t_exact:8.0f} tok/s")
 print(f"L2S screened  : {BATCH * NEW / t_fast:8.0f} tok/s "
       f"({t_exact / t_fast:.2f}x, agreement {agree:.3f})")
+
+# per-request routing: the same engine serves a quality-tier request on the
+# exact head and a latency-tier request on the screened head, no re-init
+hi = engine.generate(requests[:1], 8, head="exact")
+lo = engine.generate(requests[1:2], 8, head="screened")
+print(f"per-request routing: exact tier {hi.tokens[0][:6]}..., "
+      f"screened tier {lo.tokens[0][:6]}...")

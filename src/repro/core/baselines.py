@@ -79,33 +79,44 @@ class AdaptiveShortlist:
     def build(cls, W, b, freq_order: np.ndarray, n_head: int, n_tails: int = 4):
         head = freq_order[:n_head]
         rest = freq_order[n_head:]
-        tails = np.array_split(rest, n_tails)
-        return cls(head_ids=head, tails=[t for t in tails], W=W, b=b)
+        # drop empty tails (n_head may cover the whole vocab → head-only)
+        tails = [t for t in np.array_split(rest, n_tails) if len(t)]
+        return cls(head_ids=head, tails=tails, W=W, b=b)
 
     def topk(self, H: np.ndarray, k: int) -> np.ndarray:
         Wh = self.W[self.head_ids]
         bh = self.b[self.head_ids]
+        if not self.tails:                   # head covers the vocab: exact
+            lg = H @ Wh.T + bh
+            top = np.argsort(-lg, axis=1)[:, :k]
+            got = self.head_ids[top]
+            if got.shape[1] < k:             # k > head size: pad missing
+                pad = np.full((got.shape[0], k - got.shape[1]), -1, np.int64)
+                got = np.concatenate([got, pad], axis=1)
+            return got
         # tail "cluster logits" = mean tail vector (one pseudo-word per tail)
         tW = np.stack([self.W[t].mean(axis=0) for t in self.tails])
         tb = np.array([self.b[t].mean() for t in self.tails])
-        out = np.empty((H.shape[0], k), np.int64)
+        out = np.full((H.shape[0], k), -1, np.int64)
         for i in range(H.shape[0]):
             hl = Wh @ H[i] + bh
             tl = tW @ H[i] + tb
-            if hl[np.argpartition(-hl, k)[:k]].min() >= tl.max():
+            # k ≥ head size: the head alone cannot fill top-k — descend
+            if k < len(hl) and hl[np.argpartition(-hl, k)[:k]].min() >= tl.max():
                 top = np.argsort(-hl)[:k]
                 out[i] = self.head_ids[top]
             else:
                 t = int(np.argmax(tl))
                 ids = np.concatenate([self.head_ids, self.tails[t]])
                 lg = self.W[ids] @ H[i] + self.b[ids]
-                out[i] = ids[np.argsort(-lg)[:k]]
+                top = ids[np.argsort(-lg)[:k]]
+                out[i, :len(top)] = top
         return out
 
     def flops_per_query(self, descend_rate: float) -> float:
         d = self.W.shape[1]
         n_head = len(self.head_ids)
-        tail = np.mean([len(t) for t in self.tails])
+        tail = np.mean([len(t) for t in self.tails]) if self.tails else 0.0
         return (n_head + len(self.tails)) * d + descend_rate * tail * d
 
 

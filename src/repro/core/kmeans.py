@@ -10,6 +10,25 @@ def _normalize(x, eps=1e-8):
     return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
 
 
+def _maximin_init(key, Xn, r: int):
+    """Farthest-point init: first center random, each next center the point
+    least similar (cosine) to every center chosen so far. Unlike uniform
+    sampling this cannot seed two centers inside one tight cluster and
+    strand another — the collapse mode of k-means on separable data."""
+    N = Xn.shape[0]
+    i0 = jax.random.randint(key, (), 0, N)
+    c0 = Xn[i0]
+
+    def pick(maxsim, _):
+        idx = jnp.argmin(maxsim)
+        c = Xn[idx]
+        return jnp.maximum(maxsim, Xn @ c), c
+
+    maxsim0 = Xn @ c0
+    _, rest = jax.lax.scan(pick, maxsim0, None, length=r - 1)
+    return jnp.concatenate([c0[None], rest], axis=0)
+
+
 def spherical_kmeans(key, X, r: int, iters: int = 20):
     """Cluster rows of X (N, d) by cosine similarity into r clusters.
 
@@ -17,8 +36,7 @@ def spherical_kmeans(key, X, r: int, iters: int = 20):
     """
     N, d = X.shape
     Xn = _normalize(X.astype(jnp.float32))
-    init_idx = jax.random.choice(key, N, (r,), replace=False)
-    centers = Xn[init_idx]
+    centers = _maximin_init(key, Xn, r)
 
     def step(centers, _):
         sims = Xn @ centers.T                          # (N, r)

@@ -11,9 +11,11 @@ Prediction (paper "The Prediction Process"):
   logits over W[cand_idx[z]] + b             O(L̄·d)
   top-k within the candidate set             (padded entries = −inf)
 
-``make_screen_fn`` returns a jit-compiled batched closure used by the serving
-engine and benchmarks. The Pallas kernel path (repro.kernels) implements the
-same contract with explicit VMEM tiling for TPU.
+The serving engine and benchmarks consume this through the ``SoftmaxHead``
+protocol (repro.heads: "screened" wraps these functions, "screened-pallas"
+the Pallas kernels, which implement the same contract with explicit VMEM
+tiling for TPU). ``make_screen_fn`` remains as a standalone jit-compiled
+batched closure for direct use.
 """
 from __future__ import annotations
 
@@ -30,7 +32,12 @@ NEG_INF = -1e30
 
 @dataclass
 class ScreenParams:
-    """Learned screening model (paper: {v_t}, {c_t})."""
+    """Learned screening model (paper: {v_t}, {c_t}).
+
+    Registered as a JAX pytree (arrays are children, ``vocab_size``/``block``
+    static aux data), so a screen passes through jit boundaries as a real
+    argument — heads take it as a parameter instead of baking it in as a
+    closure constant, and swapping same-shaped screens never recompiles."""
     v: jnp.ndarray          # (r, d) cluster weights
     cand_idx: jnp.ndarray   # (r, C_max) padded candidate ids (word or block)
     cand_len: jnp.ndarray   # (r,)
@@ -52,17 +59,30 @@ class ScreenParams:
         return float((w * lens).sum() / max(w.sum(), 1.0))
 
 
+jax.tree_util.register_pytree_node(
+    ScreenParams,
+    lambda s: ((s.v, s.cand_idx, s.cand_len), (s.vocab_size, s.block)),
+    lambda aux, ch: ScreenParams(v=ch[0], cand_idx=ch[1], cand_len=ch[2],
+                                 vocab_size=aux[0], block=aux[1]),
+)
+
+
 def candidates_to_padded(mask: np.ndarray, vocab_size: int, block: int = 1,
                          pad_to_multiple: int = 8) -> Tuple[np.ndarray, np.ndarray]:
-    """(r, n_items) bool → (cand_idx (r, C_max), cand_len (r,)). Sentinel = n_items."""
+    """(r, n_items) bool → (cand_idx (r, C_max), cand_len (r,)). Sentinel = n_items.
+
+    Vectorized scatter: np.nonzero walks the mask row-major, so subtracting
+    each row's cumulative offset turns flat positions into within-row slots.
+    """
     r, n_items = mask.shape
+    mask = np.asarray(mask, bool)
     lens = mask.sum(axis=1)
     c_max = int(max(int(lens.max(initial=1)), 1))
     c_max = -(-c_max // pad_to_multiple) * pad_to_multiple
     idx = np.full((r, c_max), n_items, np.int32)
-    for t in range(r):
-        ids = np.nonzero(mask[t])[0]
-        idx[t, :len(ids)] = ids
+    rows, cols = np.nonzero(mask)
+    slots = np.arange(rows.size) - np.repeat(np.cumsum(lens) - lens, lens)
+    idx[rows, slots] = cols
     return idx, lens.astype(np.int32)
 
 

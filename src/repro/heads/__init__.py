@@ -1,0 +1,52 @@
+"""repro.heads — the pluggable decode-head API.
+
+One protocol (``SoftmaxHead``), one registry, every backend:
+
+    from repro import heads
+    head = heads.get("screened", W=W, b=b, screen=screen)
+    ids, logprobs = head.topk_logprobs(h, k=5)
+
+Registered backends (see each class for the cost model):
+
+  exact           full-vocab softmax                      O(L·d)
+  screened        L2S route + candidate softmax (jnp)     O((r+L̄)·d)
+  screened-pallas L2S on the Pallas TPU kernels           O((r+L̄)·d)
+  screened-cpu    L2S per-query numpy (paper timing)      O((r+L̄)·d)
+  svd             SVD-softmax preview + rerank            O(d·ρ + L·ρ + Ñ·d)
+  shortlist       adaptive-softmax frequent shortlist     O((n_head+τ)·d)
+  greedy-mips     budgeted per-dimension screening        O(B·d)
+  lsh-mips        SimHash bands + bucket rerank           O(bands·bits·d + pool·d)
+  pca-mips        PCA-tree leaf + rerank                  O(depth·d + leaf·d)
+
+New heads register with ``heads.register(name, factory)`` where the factory
+takes the construction context as kwargs (``W``, ``b``, ``screen``, ...) and
+tolerates extras — that single seam is how new approximation methods,
+kernels, and per-request policies plug into the engine and benchmarks."""
+from repro.heads.base import (NEG_INF, SoftmaxHead, sample_from_logits,
+                              screened_flops_per_query)
+from repro.heads.registry import get, names, register
+from repro.heads.exact import ExactHead
+from repro.heads.screened import ScreenedHead
+from repro.heads.pallas import ScreenedPallasHead
+from repro.heads.adapters import (BaselineHead, GreedyMIPSHead, LSHHead,
+                                  PCAHead, ScreenedNumpyHead, ShortlistHead,
+                                  SVDHead)
+
+register("exact", lambda W, b, **_: ExactHead(W, b))
+register("screened", lambda W, b, screen, **_: ScreenedHead(W, b, screen))
+register("screened-pallas",
+         lambda W, b, screen, interpret=True, **_:
+         ScreenedPallasHead(W, b, screen, interpret=interpret))
+register("screened-cpu",
+         lambda W, b, screen, **_: ScreenedNumpyHead(W, b, screen))
+register("svd", lambda W, b, rho=16, n_top=None, **_:
+         SVDHead(W, b, rho=rho, n_top=n_top))
+register("shortlist",
+         lambda W, b, freq_order=None, n_head=None, n_tails=4, **_:
+         ShortlistHead(W, b, freq_order=freq_order, n_head=n_head,
+                       n_tails=n_tails))
+register("greedy-mips", lambda W, b, budget=512, **_:
+         GreedyMIPSHead(W, b, budget=budget))
+register("lsh-mips", lambda W, b, bands=8, bits=10, seed=0, **_:
+         LSHHead(W, b, bands=bands, bits=bits, seed=seed))
+register("pca-mips", lambda W, b, depth=6, **_: PCAHead(W, b, depth=depth))

@@ -1,0 +1,108 @@
+"""The ``SoftmaxHead`` protocol — the one seam every decode head plugs into.
+
+A head owns the softmax layer (W (L, d), b (L,)) plus whatever auxiliary
+structure its approximation needs (a learned screen, SVD factors, hash
+tables, ...) and answers four queries over context vectors h (B, d):
+
+  topk(h, k)          → (ids (B, k) int32, scores (B, k))   raw logits
+  topk_logprobs(h, k) → (ids (B, k) int32, logprobs (B, k)) paper §4.2
+                        convention: log-softmax over the head's OWN
+                        candidate space, probability 0 elsewhere
+  next(h)             → (B,) int32 greedy argmax
+  sample(key, h, temperature, top_p) → (B,) int32
+
+``prepare()`` performs any one-time packing (e.g. MXU block tiling) and
+returns the head; it is idempotent and is called by the registry and the
+serving engine, so constructors stay cheap.
+
+Metadata drives engine behavior and benchmark reporting:
+
+  flops_per_query — analytic multiply-accumulate count per query, the
+                    hardware-independent speedup column of paper Table 1
+  device_kind     — "jax" or "numpy" (numpy heads run per-query on host,
+                    the paper's single-thread CPU timing protocol)
+  is_jittable     — True iff the head's methods are jnp-traceable, so the
+                    engine may fuse them into its jitted decode step
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def screened_flops_per_query(screen, d: int) -> float:
+    """Shared L2S cost model O((r + L̄)·d): routing plus the mean candidate
+    matmul, with L̄ the uniform-over-clusters mean candidate words. One
+    definition for every screened backend so Table-1 flops columns agree."""
+    lbar = float(np.mean(np.asarray(screen.cand_len))) * screen.block
+    return float((screen.r + lbar) * d)
+
+
+class SoftmaxHead:
+    """Base class / protocol for decode heads. Subclasses must implement
+    ``topk`` and ``topk_logprobs``; ``next`` and ``sample`` have generic
+    defaults in terms of those."""
+
+    name: str = "abstract"
+    device_kind: str = "jax"
+    is_jittable: bool = True
+
+    def prepare(self) -> "SoftmaxHead":
+        """One-time packing / table builds. Idempotent."""
+        return self
+
+    # -- core queries -------------------------------------------------------
+    def topk(self, h, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def topk_logprobs(self, h, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def next(self, h) -> jnp.ndarray:
+        ids, _ = self.topk(h, 1)
+        return ids[:, 0].astype(jnp.int32)
+
+    def sample(self, key, h, temperature: float = 1.0,
+               top_p: float = 1.0) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- metadata -----------------------------------------------------------
+    @property
+    def flops_per_query(self) -> float:
+        """Analytic MACs per query (paper's hardware-independent cost)."""
+        return float("nan")
+
+    def describe(self) -> dict:
+        return {"name": self.name, "device_kind": self.device_kind,
+                "is_jittable": self.is_jittable,
+                "flops_per_query": self.flops_per_query}
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"{type(self).__name__}(name={self.name!r}, "
+                f"flops_per_query={self.flops_per_query:.3g})")
+
+
+def sample_from_logits(key, logits, temperature: float, top_p: float):
+    """Temperature + nucleus sampling over a (B, C) logit matrix.
+
+    temperature ≤ 0 degenerates to argmax; top_p < 1 keeps the smallest
+    prefix of the sorted distribution with mass ≥ top_p.
+    """
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest prefix with mass ≥ top_p; cutoff = last kept logit
+        k_keep = jnp.sum(cum < top_p, axis=-1) + 1
+        cutoff = jnp.take_along_axis(sorted_logits,
+                                     (k_keep - 1)[:, None], axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, NEG_INF)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

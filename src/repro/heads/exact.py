@@ -1,0 +1,61 @@
+"""ExactHead — full-vocabulary softmax, the baseline every approximation is
+measured against. All impls are module-level jitted functions (static k), so
+compilation caches are shared across head instances and across engine calls."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.heads.base import SoftmaxHead, sample_from_logits
+
+
+@jax.jit
+def _logits(W, b, h):
+    return (jnp.einsum("bd,vd->bv", h, W) + b).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames="k")
+def _topk(W, b, h, k):
+    vals, ids = jax.lax.top_k(jnp.einsum("bd,vd->bv", h, W) + b, k)
+    return ids.astype(jnp.int32), vals
+
+
+@partial(jax.jit, static_argnames="k")
+def _topk_logprobs(W, b, h, k):
+    lp = jax.nn.log_softmax(_logits(W, b, h), axis=-1)
+    vals, ids = jax.lax.top_k(lp, k)
+    return ids.astype(jnp.int32), vals
+
+
+@jax.jit
+def _next(W, b, h):
+    return jnp.argmax(jnp.einsum("bd,vd->bv", h, W) + b,
+                      axis=-1).astype(jnp.int32)
+
+
+class ExactHead(SoftmaxHead):
+    name = "exact"
+
+    def __init__(self, W, b):
+        self.W = jnp.asarray(W)
+        self.b = jnp.asarray(b)
+
+    def topk(self, h, k: int):
+        return _topk(self.W, self.b, h, k)
+
+    def topk_logprobs(self, h, k: int):
+        return _topk_logprobs(self.W, self.b, h, k)
+
+    def next(self, h):
+        return _next(self.W, self.b, h)
+
+    def sample(self, key, h, temperature: float = 1.0, top_p: float = 1.0):
+        return sample_from_logits(key, _logits(self.W, self.b, h),
+                                  temperature, top_p)
+
+    @property
+    def flops_per_query(self) -> float:
+        L, d = self.W.shape
+        return float(L * d)

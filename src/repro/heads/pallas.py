@@ -1,0 +1,89 @@
+"""ScreenedPallasHead — the L2S head on the Pallas TPU kernel path:
+cluster_route kernel → scalar-prefetch block gather-matmul → subset top-k.
+
+This head OWNS the block-candidate invariant: the screen must have been fit
+at ``block == V_BLK`` (= 128, the MXU tile height) so candidate sets are sets
+of vocab blocks and the "gather" is a blocked DMA of exactly the candidate
+tiles. ``prepare()`` does the one-time MXU packing of (W, b) into
+(n_blk, V_BLK, d) tiles; rows past the vocab are padded with −inf bias so
+they can never win top-k.
+
+``interpret=True`` (default) runs the kernels in interpret mode — this
+container is CPU-only; pass False on real TPUs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.screening import ScreenParams
+from repro.heads.base import (SoftmaxHead, sample_from_logits,
+                              screened_flops_per_query)
+from repro.kernels.screen import V_BLK
+
+
+class ScreenedPallasHead(SoftmaxHead):
+    name = "screened-pallas"
+
+    def __init__(self, W, b, screen: ScreenParams, interpret: bool = True):
+        assert screen is not None and screen.block == V_BLK, (
+            f"Pallas head needs a {V_BLK}-word block-candidate screen "
+            f"(got block={getattr(screen, 'block', None)}); fit with "
+            f"L2SConfig(vocab_block={V_BLK})")
+        self.W = jnp.asarray(W)
+        self.b = jnp.asarray(b)
+        self.screen = screen
+        self.interpret = interpret
+        self._Wb = None
+        self._bb = None
+
+    def prepare(self) -> "ScreenedPallasHead":
+        if self._Wb is None:
+            from repro.kernels.ops import pack_head_blocks
+            self._Wb, self._bb = pack_head_blocks(self.W, self.b)
+        return self
+
+    @property
+    def packed_shape(self):
+        """(n_blk, V_BLK, d) of the MXU-tiled weights (after prepare())."""
+        self.prepare()
+        return tuple(self._Wb.shape)
+
+    @property
+    def packed_nbytes(self) -> int:
+        self.prepare()
+        return int(self._Wb.nbytes + self._bb.nbytes)
+
+    def _candidate_logits(self, h):
+        from repro.kernels.ops import screened_candidate_logits_tpu
+        self.prepare()
+        return screened_candidate_logits_tpu(
+            self._Wb, self._bb, self.screen.v, self.screen.cand_idx, h,
+            interpret=self.interpret)
+
+    def topk(self, h, k: int):
+        from repro.kernels.ops import screened_topk_tpu
+        self.prepare()
+        ids, vals = screened_topk_tpu(self._Wb, self._bb, self.screen.v,
+                                      self.screen.cand_idx, h, k=k,
+                                      interpret=self.interpret)
+        return ids.astype(jnp.int32), vals
+
+    def topk_logprobs(self, h, k: int):
+        logits, word_ids = self._candidate_logits(h)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        vals, pos = jax.lax.top_k(lp, k)
+        ids = jnp.take_along_axis(word_ids, pos, axis=-1)
+        return ids.astype(jnp.int32), vals
+
+    def sample(self, key, h, temperature: float = 1.0, top_p: float = 1.0):
+        logits, word_ids = self._candidate_logits(h)
+        choice = sample_from_logits(key, logits.astype(jnp.float32),
+                                    temperature, top_p)
+        return jnp.take_along_axis(word_ids, choice[:, None],
+                                   axis=-1)[:, 0].astype(jnp.int32)
+
+    @property
+    def flops_per_query(self) -> float:
+        # identical cost model to the jnp screened head — the kernel
+        # changes the constant, not the count
+        return screened_flops_per_query(self.screen, self.W.shape[1])

@@ -1,0 +1,44 @@
+"""String-keyed head registry: ``get("screened-pallas", W=W, b=b, screen=s)``.
+
+Factories receive the construction context as keyword arguments — at minimum
+``W`` and ``b``; screening heads also need ``screen``; baseline adapters take
+their method-specific knobs (``rho``, ``budget``, ``bands``, ...). Factories
+must tolerate extra kwargs so one context dict can build every head
+(``**_`` in the signature), which is what lets benchmarks enumerate the
+whole registry over a shared fixture.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.heads.base import SoftmaxHead
+
+_REGISTRY: Dict[str, Callable[..., SoftmaxHead]] = {}
+
+
+def register(name: str, factory: Callable[..., SoftmaxHead] = None):
+    """Register a head factory. Usable directly or as a decorator:
+
+        heads.register("my-head", lambda W, b, **_: MyHead(W, b))
+
+        @heads.register("my-head")
+        def build(W, b, **_): ...
+    """
+    if factory is None:
+        def deco(f):
+            _REGISTRY[name] = f
+            return f
+        return deco
+    _REGISTRY[name] = factory
+    return factory
+
+
+def get(name: str, **context) -> SoftmaxHead:
+    """Build + ``prepare()`` the head registered under ``name``."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown head {name!r}; registered: {names()}")
+    return _REGISTRY[name](**context).prepare()
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)

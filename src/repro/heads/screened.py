@@ -1,0 +1,79 @@
+"""ScreenedHead — the paper's L2S prediction process in pure jnp:
+route z(h) = argmax_t v_t·h, exact softmax restricted to cluster z's
+learned candidate set.
+
+``ScreenParams`` is a registered JAX pytree (repro.core.screening), so the
+screen is passed through the jit boundary as a real argument here — swapping
+screens does NOT trigger recompilation as long as shapes match, which is what
+makes per-request head switching cheap in the serving engine."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.screening import (ScreenParams, assign_clusters,
+                                  screened_logits, screened_topk)
+from repro.heads.base import (SoftmaxHead, sample_from_logits,
+                              screened_flops_per_query)
+
+
+@partial(jax.jit, static_argnames="k")
+def _topk(W, b, screen, h, k):
+    ids, vals = screened_topk(W, b, screen, h, k)
+    return ids.astype(jnp.int32), vals
+
+
+@partial(jax.jit, static_argnames="k")
+def _topk_logprobs(W, b, screen, h, k):
+    """Log-softmax over the ENTIRE routed candidate set (paper §4.2: "only
+    calculate log-softmax values on reduced search space and leave
+    probability of other vocabularies ... 0"), then top-k."""
+    cluster = assign_clusters(screen.v, h)
+    logits, word_ids = screened_logits(W, b, screen, h, cluster)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    vals, pos = jax.lax.top_k(lp, k)
+    ids = jnp.take_along_axis(word_ids, pos, axis=-1)
+    return ids.astype(jnp.int32), vals
+
+
+@jax.jit
+def _candidate_logits(W, b, screen, h):
+    cluster = assign_clusters(screen.v, h)
+    return screened_logits(W, b, screen, h, cluster)
+
+
+class ScreenedHead(SoftmaxHead):
+    name = "screened"
+
+    def __init__(self, W, b, screen: ScreenParams):
+        assert screen is not None, (
+            "ScreenedHead needs a fitted ScreenParams — fit one with "
+            "fit_l2s(...) and pass screen= to the engine or heads.get")
+        self.W = jnp.asarray(W)
+        self.b = jnp.asarray(b)
+        self.screen = screen
+
+    def topk(self, h, k: int):
+        return _topk(self.W, self.b, self.screen, h, k)
+
+    def topk_logprobs(self, h, k: int):
+        return _topk_logprobs(self.W, self.b, self.screen, h, k)
+
+    def next(self, h):
+        return self.topk(h, 1)[0][:, 0]
+
+    def sample(self, key, h, temperature: float = 1.0, top_p: float = 1.0):
+        """Temperature/nucleus sample WITHIN the routed candidate set
+        (probability 0 elsewhere, the paper's reduced-search-space
+        convention)."""
+        logits, word_ids = _candidate_logits(self.W, self.b, self.screen, h)
+        choice = sample_from_logits(key, logits.astype(jnp.float32),
+                                    temperature, top_p)
+        return jnp.take_along_axis(word_ids, choice[:, None],
+                                   axis=-1)[:, 0].astype(jnp.int32)
+
+    @property
+    def flops_per_query(self) -> float:
+        return screened_flops_per_query(self.screen, self.W.shape[1])

@@ -32,14 +32,17 @@ def pack_head_blocks(W: jnp.ndarray, b: jnp.ndarray, v_blk: int = V_BLK):
     return Wp.reshape(n_blk, v_blk, d), bp.reshape(n_blk, v_blk)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def screened_topk_tpu(W_blocks, b_blocks, v, cand_blocks, h, k: int = 5,
-                      interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full kernelized L2S prediction.
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def screened_candidate_logits_tpu(W_blocks, b_blocks, v, cand_blocks, h,
+                                  interpret: bool = True
+                                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Kernelized route + gather-matmul over the routed candidate blocks.
 
     W_blocks (n_blk, V_BLK, d), b_blocks (n_blk, V_BLK): packed softmax head.
     v (r, d): cluster weights. cand_blocks (r, K) int32, sentinel ≥ n_blk.
-    h (B, d): context vectors. → (word ids (B, k), logits (B, k)).
+    h (B, d): context vectors. → (logits (B, K·V_BLK) with −inf at sentinel
+    slots, word ids (B, K·V_BLK) with sentinel n_blk·V_BLK) — the flattened
+    candidate union, ready for top-k, log-softmax, or sampling.
     """
     n_blk, v_blk, d = W_blocks.shape
     cluster = cluster_route_pallas(h, v, interpret=interpret)        # (B,)
@@ -52,6 +55,19 @@ def screened_topk_tpu(W_blocks, b_blocks, v, cand_blocks, h, k: int = 5,
         valid, block_ids[..., None] * v_blk +
         jnp.arange(v_blk, dtype=jnp.int32)[None, None, :],
         n_blk * v_blk).reshape(h.shape[0], -1)
+    return logits, word_ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def screened_topk_tpu(W_blocks, b_blocks, v, cand_blocks, h, k: int = 5,
+                      interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full kernelized L2S prediction: candidate logits → top-k.
+
+    Same inputs as ``screened_candidate_logits_tpu``;
+    → (word ids (B, k), logits (B, k)).
+    """
+    logits, word_ids = screened_candidate_logits_tpu(
+        W_blocks, b_blocks, v, cand_blocks, h, interpret=interpret)
     vals, pos = jax.lax.top_k(logits, k)
     ids = jnp.take_along_axis(word_ids, pos, axis=-1)
     return ids, vals

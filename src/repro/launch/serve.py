@@ -76,13 +76,13 @@ def main(argv=None):
     prompts = corpus.sample_batch(args.requests, args.prompt_len, seed=42)
 
     t0 = time.time()
-    exact = engine.generate(prompts, args.max_new, use_screen=False)
+    exact = engine.generate(prompts, args.max_new, head="exact")
     t_exact = time.time() - t0
     print(f"[serve] exact decode: {args.requests}×{args.max_new} tokens "
           f"in {t_exact:.2f}s")
     if screen is not None:
         t0 = time.time()
-        fast = engine.generate(prompts, args.max_new, use_screen=True)
+        fast = engine.generate(prompts, args.max_new, head="screened")
         t_l2s = time.time() - t0
         agree = float((fast.tokens == exact.tokens).mean())
         print(f"[serve] L2S decode:  {t_l2s:.2f}s  "

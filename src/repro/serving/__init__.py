@@ -1,2 +1,8 @@
 from repro.serving.engine import DecodeEngine, GenerationResult
+# deprecated re-exports, kept for one deprecation cycle alongside
+# repro.serving.sampling — each call emits a DeprecationWarning and
+# delegates to the matching repro.heads backend
 from repro.serving.sampling import greedy_next, screened_greedy_next
+
+__all__ = ["DecodeEngine", "GenerationResult",
+           "greedy_next", "screened_greedy_next"]

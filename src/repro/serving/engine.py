@@ -1,26 +1,39 @@
-"""Batched decode engine: prefill → token-by-token generation.
+"""Batched decode engine: prefill → token-by-token generation through a
+pluggable ``SoftmaxHead``.
 
-Two head paths, switchable per request:
-  * exact: full-vocab softmax (the baseline the paper measures against)
-  * screened: L2S route + candidate-set softmax (the paper's technique)
+The head is the ONE seam: greedy decode, temperature/nucleus sampling, and
+beam search all route next-token selection through ``head.next`` /
+``head.sample`` / ``head.topk_logprobs``. A head is a registry name
+("exact", "screened", "screened-pallas", "svd", ...) resolved against the
+engine's (W, b, screen) context, or a ready ``SoftmaxHead`` instance — and
+is switchable PER REQUEST: every public method takes ``head=`` overriding
+the engine default.
 
-Beam search follows the paper's §4.2 protocol: log-softmax over the reduced
-candidate space, probability 0 (−inf log-prob) elsewhere.
+Compilation discipline: the model prefill/decode step is jitted once at
+engine init; per-head composed steps (decode + head.next) are jitted once
+per head and cached, and head-side top-k/log-prob functions are
+module-level jits with static k — nothing re-wraps ``jax.jit`` per
+invocation. Non-jittable heads (the numpy §4.1 baselines) run on the host
+side of the jitted decode step.
+
+Beam search follows the paper's §4.2 protocol: log-softmax over the head's
+reduced candidate space, probability 0 (−inf log-prob) elsewhere.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import heads as heads_registry
 from repro.core.screening import ScreenParams
+from repro.heads.base import SoftmaxHead
 from repro.models.model import Model
-from repro.serving.sampling import (greedy_next, screened_greedy_next,
-                                    screened_topk_logprobs, topk_logprobs)
+
+HeadLike = Union[str, SoftmaxHead]
 
 
 @dataclass
@@ -31,13 +44,13 @@ class GenerationResult:
 
 
 class DecodeEngine:
-    def __init__(self, model: Model, params, screen: Optional[ScreenParams] = None,
-                 max_len: int = 512, cache_dtype=jnp.float32,
-                 use_kernel: bool = False):
-        """``use_kernel``: route the screened head through the Pallas TPU
-        kernels (block-candidate screen required, ``screen.block == 128``) —
-        cluster_route + scalar-prefetch gather-matmul, interpret-mode on CPU.
-        """
+    def __init__(self, model: Model, params, head: HeadLike = "exact",
+                 screen: Optional[ScreenParams] = None, max_len: int = 512,
+                 cache_dtype=jnp.float32, head_kwargs: Optional[dict] = None):
+        """``head``: default decode head — a registry name or an instance.
+        ``screen``: L2S screen handed to screening heads resolved by name.
+        ``head_kwargs``: extra construction kwargs for name resolution
+        (e.g. ``{"interpret": False}`` on real TPUs, ``{"rho": 32}``)."""
         self.model = model
         self.params = params
         self.screen = screen
@@ -45,85 +58,150 @@ class DecodeEngine:
         self.cache_dtype = cache_dtype
         W, b = model.softmax_weights(params)
         self.W, self.b = W, b
-        self.use_kernel = use_kernel
-        if use_kernel:
-            from repro.kernels.ops import pack_head_blocks
-            assert screen is not None and screen.block == 128, \
-                "kernel path needs a 128-word block-candidate screen"
-            self._Wb, self._bb = pack_head_blocks(W, b)
+        self._head_kwargs = dict(head_kwargs or {})
+        self._head_cache: Dict[str, SoftmaxHead] = {}
+        # bounded: steps are cheap to rebuild but hold compiled executables;
+        # per-request temperatures / transient head instances must not
+        # accumulate cache entries forever (oldest-inserted evicted)
+        self._step_cache: Dict[tuple, callable] = {}
+        self._step_cache_max = 32
         self._jit_prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache))
-        self._jit_step_exact = jax.jit(self._step_exact)
-        self._jit_step_screen = jax.jit(self._step_screen)
+        self._jit_decode = jax.jit(
+            lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos))
+        self.head = self.resolve_head("exact" if head is None else head)
 
-    # -- one-token steps (jitted) ------------------------------------------
-    def _step_exact(self, params, token, cache, pos):
-        h, cache = self.model.decode_step(params, token, cache, pos)
-        nxt = greedy_next(self.W, self.b, h)
-        return nxt, h, cache
+    # -- head resolution ----------------------------------------------------
+    def resolve_head(self, head: Optional[HeadLike]) -> SoftmaxHead:
+        """name | instance | None (engine default) → prepared SoftmaxHead."""
+        if head is None:
+            return self.head
+        if isinstance(head, str):
+            if head not in self._head_cache:
+                self._head_cache[head] = heads_registry.get(
+                    head, W=self.W, b=self.b, screen=self.screen,
+                    **self._head_kwargs)
+            return self._head_cache[head]
+        return head.prepare()
 
-    def _step_screen(self, params, token, cache, pos):
-        h, cache = self.model.decode_step(params, token, cache, pos)
-        if self.use_kernel:
-            from repro.kernels.ops import screened_topk_tpu
-            ids, _ = screened_topk_tpu(self._Wb, self._bb, self.screen.v,
-                                       self.screen.cand_idx, h, k=1)
-            nxt = ids[:, 0].astype(jnp.int32)
-        else:
-            nxt = screened_greedy_next(self.W, self.b, self.screen, h)
-        return nxt, h, cache
+    # -- per-head jitted steps (built once, cached) --------------------------
+    def _greedy_step(self, head: SoftmaxHead):
+        key = (head, "greedy")
+        if key not in self._step_cache:
+            if head.is_jittable:
+                def step(params, tok, cache, pos):
+                    h, cache = self.model.decode_step(params, tok, cache, pos)
+                    return head.next(h), h, cache
+                fn = jax.jit(step)
+            else:
+                def fn(params, tok, cache, pos):
+                    h, cache = self._jit_decode(params, tok, cache, pos)
+                    nxt = jnp.asarray(np.asarray(head.next(np.asarray(h))),
+                                      jnp.int32)
+                    return nxt, h, cache
+            self._put_step(key, fn)
+        return self._step_cache[key]
 
-    # -- greedy generation ---------------------------------------------------
+    def _put_step(self, key, fn):
+        while len(self._step_cache) >= self._step_cache_max:
+            self._step_cache.pop(next(iter(self._step_cache)))
+        self._step_cache[key] = fn
+
+    def _sample_step(self, head: SoftmaxHead, temperature: float,
+                     top_p: float):
+        key = (head, "sample", float(temperature), float(top_p))
+        if key not in self._step_cache:
+            if head.is_jittable:
+                def step(params, rkey, tok, cache, pos):
+                    h, cache = self.model.decode_step(params, tok, cache, pos)
+                    return head.sample(rkey, h, temperature, top_p), h, cache
+                fn = jax.jit(step)
+            else:
+                def fn(params, rkey, tok, cache, pos):
+                    h, cache = self._jit_decode(params, tok, cache, pos)
+                    nxt = jnp.asarray(
+                        np.asarray(head.sample(rkey, np.asarray(h),
+                                               temperature, top_p)),
+                        jnp.int32)
+                    return nxt, h, cache
+            self._put_step(key, fn)
+        return self._step_cache[key]
+
+    # -- generation (greedy or sampled, head-routed) -------------------------
     def generate(self, prompts: np.ndarray, max_new: int,
-                 use_screen: bool = False) -> GenerationResult:
-        """prompts: (B, Tp) int32. Greedy decode of max_new tokens."""
+                 head: Optional[HeadLike] = None,
+                 temperature: Optional[float] = None, top_p: float = 1.0,
+                 key=None) -> GenerationResult:
+        """prompts: (B, Tp) int32. Decode ``max_new`` tokens.
+
+        ``temperature=None`` (default) is greedy; otherwise temperature /
+        nucleus sampling through ``head.sample`` (``key`` required unless
+        temperature ≤ 0)."""
+        hd = self.resolve_head(head)
         B, Tp = prompts.shape
         cache = self.model.init_cache(B, self.max_len, dtype=self.cache_dtype)
-        h, cache = self._jit_prefill(self.params, {"tokens": jnp.asarray(prompts)},
-                                     cache)
+        h, cache = self._jit_prefill(self.params,
+                                     {"tokens": jnp.asarray(prompts)}, cache)
         h_last = h[:, -1]
-        step = self._jit_step_screen if use_screen else self._jit_step_exact
-        if use_screen:
-            if self.use_kernel:
-                from repro.kernels.ops import screened_topk_tpu
-                ids, _ = screened_topk_tpu(self._Wb, self._bb, self.screen.v,
-                                           self.screen.cand_idx, h_last, k=1)
-                nxt = ids[:, 0].astype(jnp.int32)
-            else:
-                nxt = screened_greedy_next(self.W, self.b, self.screen, h_last)
-        else:
-            nxt = greedy_next(self.W, self.b, h_last)
-        out = [np.asarray(nxt)]
-        tok = nxt
+        if temperature is None:
+            step = self._greedy_step(hd)
+            first = hd.next(h_last if hd.is_jittable else np.asarray(h_last))
+            tok = jnp.asarray(np.asarray(first), jnp.int32)
+            out = [np.asarray(tok)]
+            for i in range(max_new - 1):
+                tok, _, cache = step(self.params, tok, cache, Tp + i)
+                out.append(np.asarray(tok))
+            return GenerationResult(tokens=np.stack(out, axis=1),
+                                    steps=max_new)
+        if key is None:
+            if temperature > 0:
+                raise ValueError("sampling with temperature > 0 needs a PRNG "
+                                 "key (generate(..., key=jax.random.key(..)))")
+            key = jax.random.key(0)
+        step = self._sample_step(hd, temperature, top_p)
+        key, k0 = jax.random.split(key)
+        first = hd.sample(k0, h_last if hd.is_jittable else np.asarray(h_last),
+                          temperature, top_p)
+        tok = jnp.asarray(np.asarray(first), jnp.int32)
+        out = [np.asarray(tok)]
         for i in range(max_new - 1):
-            tok, h1, cache = step(self.params, tok, cache, Tp + i)
+            key, ki = jax.random.split(key)
+            tok, _, cache = step(self.params, ki, tok, cache, Tp + i)
             out.append(np.asarray(tok))
         return GenerationResult(tokens=np.stack(out, axis=1), steps=max_new)
 
-    # -- beam search (batch of 1 prompt, beam B_w) -----------------------------
+    # -- beam search (batch of 1 prompt, beam B_w) ---------------------------
     def beam_search(self, prompt: np.ndarray, beam: int, max_new: int,
-                    use_screen: bool = False) -> GenerationResult:
-        """prompt: (Tp,) int32. Returns the top beam's tokens and score."""
+                    head: Optional[HeadLike] = None) -> GenerationResult:
+        """prompt: (Tp,) int32. Returns the top beam's tokens and score.
+
+        ``head.topk_logprobs`` supplies the per-step (ids, log-probs); its
+        jit (static k) lives at head-module level, so repeated calls — and
+        repeated ``beam_search`` invocations — reuse one compilation."""
+        hd = self.resolve_head(head)
         Tp = len(prompt)
         prompts = np.broadcast_to(prompt[None], (beam, Tp)).copy()
-        cache = self.model.init_cache(beam, self.max_len, dtype=self.cache_dtype)
+        cache = self.model.init_cache(beam, self.max_len,
+                                      dtype=self.cache_dtype)
         h, cache = self._jit_prefill(self.params,
                                      {"tokens": jnp.asarray(prompts)}, cache)
         h_last = h[:, -1]                                  # (beam, d)
 
-        lp_fn = (partial(screened_topk_logprobs, self.W, self.b, self.screen)
-                 if use_screen else partial(topk_logprobs, self.W, self.b))
-        lp_fn = jax.jit(lp_fn, static_argnames=("k",))
+        def lp_fn(h_step, k):
+            if not hd.is_jittable:
+                h_step = np.asarray(h_step)
+            return hd.topk_logprobs(h_step, k)
 
-        ids, lps = lp_fn(h_last[:1], k=beam)               # expand from beam 0
+        ids, lps = lp_fn(h_last[:1], beam)                 # expand from beam 0
+        ids, lps = np.asarray(ids), np.asarray(lps)
         beam_tokens = [[int(ids[0, j])] for j in range(beam)]
         beam_scores = np.asarray(lps[0], np.float64).copy()
         tok = jnp.asarray(ids[0], jnp.int32)
 
-        step_fn = jax.jit(lambda p, t, c, pos: self.model.decode_step(p, t, c, pos))
         for i in range(max_new - 1):
-            h1, cache = step_fn(self.params, tok, cache, Tp + i)
-            ids, lps = lp_fn(h1, k=beam)                   # (beam, beam)
+            h1, cache = self._jit_decode(self.params, tok, cache, Tp + i)
+            ids, lps = lp_fn(h1, beam)                     # (beam, beam)
+            ids = np.asarray(ids)
             total = beam_scores[:, None] + np.asarray(lps, np.float64)
             flat = total.reshape(-1)
             top = np.argsort(-flat)[:beam]

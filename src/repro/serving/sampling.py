@@ -1,74 +1,62 @@
-"""Next-token selection: exact full-softmax vs L2S-screened."""
+"""DEPRECATED — next-token selection now lives behind the ``SoftmaxHead``
+protocol in ``repro.heads``. These shims keep the old exact/``screened_*``
+pairs importable for one deprecation cycle; each call builds the matching
+head and delegates:
+
+    greedy_next(W, b, h)                 → heads.ExactHead(W, b).next(h)
+    screened_topk_logprobs(W, b, s, ...) → heads.ScreenedHead(W, b, s)...
+
+Migrate to ``repro.heads.get(name, W=W, b=b, screen=screen)``."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.core.screening import (ScreenParams, assign_clusters,
-                                  screened_logits, screened_topk)
+from repro.core.screening import ScreenParams
+from repro.heads import ExactHead, ScreenedHead
+from repro.heads.base import sample_from_logits as _sample_from_logits  # noqa: F401 (back-compat)
+
+
+def _warn(name: str, repl: str):
+    warnings.warn(
+        f"repro.serving.sampling.{name} is deprecated; use {repl} "
+        "(see repro.heads)", DeprecationWarning, stacklevel=3)
 
 
 def greedy_next(W, b, h):
-    """Exact argmax over the full vocabulary. h: (B, d) → (B,) int32."""
-    logits = jnp.einsum("bd,vd->bv", h, W) + b
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    """Deprecated: ExactHead.next."""
+    _warn("greedy_next", 'heads.get("exact", W=W, b=b).next(h)')
+    return ExactHead(W, b).next(h)
 
 
 def screened_greedy_next(W, b, screen: ScreenParams, h):
-    """L2S argmax: route → exact softmax within the candidate set only."""
-    ids, _ = screened_topk(W, b, screen, h, k=1)
-    return ids[:, 0].astype(jnp.int32)
+    """Deprecated: ScreenedHead.next."""
+    _warn("screened_greedy_next",
+          'heads.get("screened", W=W, b=b, screen=screen).next(h)')
+    return ScreenedHead(W, b, screen).next(h)
 
 
 def topk_logprobs(W, b, h, k: int):
-    """Exact top-k (ids, log-probs) for beam search."""
-    logits = (jnp.einsum("bd,vd->bv", h, W) + b).astype(jnp.float32)
-    lp = jax.nn.log_softmax(logits, axis=-1)
-    vals, ids = jax.lax.top_k(lp, k)
-    return ids, vals
+    """Deprecated: ExactHead.topk_logprobs."""
+    _warn("topk_logprobs", 'heads.get("exact", ...).topk_logprobs(h, k)')
+    return ExactHead(W, b).topk_logprobs(h, k)
+
+
+def screened_topk_logprobs(W, b, screen: ScreenParams, h, k: int):
+    """Deprecated: ScreenedHead.topk_logprobs."""
+    _warn("screened_topk_logprobs",
+          'heads.get("screened", ...).topk_logprobs(h, k)')
+    return ScreenedHead(W, b, screen).topk_logprobs(h, k)
 
 
 def sample_next(key, W, b, h, temperature: float = 1.0, top_p: float = 1.0):
-    """Temperature + nucleus sampling over the full vocabulary."""
-    logits = (jnp.einsum("bd,vd->bv", h, W) + b).astype(jnp.float32)
-    return _sample_from_logits(key, logits, temperature, top_p)
+    """Deprecated: ExactHead.sample."""
+    _warn("sample_next", 'heads.get("exact", ...).sample(key, h, ...)')
+    return ExactHead(W, b).sample(key, h, temperature, top_p)
 
 
 def screened_sample_next(key, W, b, screen: ScreenParams, h,
                          temperature: float = 1.0, top_p: float = 1.0):
-    """L2S sampling: route → candidate-set logits → temperature/nucleus
-    sample WITHIN the candidate set (probability 0 elsewhere, per the
-    paper's reduced-search-space convention)."""
-    cluster = assign_clusters(screen.v, h)
-    logits, word_ids = screened_logits(W, b, screen, h, cluster)
-    choice = _sample_from_logits(key, logits.astype(jnp.float32),
-                                 temperature, top_p)
-    return jnp.take_along_axis(word_ids, choice[:, None], axis=-1)[:, 0]
-
-
-def _sample_from_logits(key, logits, temperature, top_p):
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
-    if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # smallest prefix with mass ≥ top_p; cutoff = last kept logit
-        k_keep = jnp.sum(cum < top_p, axis=-1) + 1
-        cutoff = jnp.take_along_axis(sorted_logits,
-                                     (k_keep - 1)[:, None], axis=-1)
-        logits = jnp.where(logits >= cutoff, logits, -1e30)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
-
-
-def screened_topk_logprobs(W, b, screen: ScreenParams, h, k: int):
-    """L2S top-k log-probs: log-softmax over the ENTIRE routed candidate set
-    (paper §4.2: "only calculate log-softmax values on reduced search space
-    and leave probability of other vocabularies ... 0"), then top-k."""
-    cluster = assign_clusters(screen.v, h)
-    logits, word_ids = screened_logits(W, b, screen, h, cluster)
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    vals, pos = jax.lax.top_k(lp, k)
-    ids = jnp.take_along_axis(word_ids, pos, axis=-1)
-    return ids, vals
+    """Deprecated: ScreenedHead.sample."""
+    _warn("screened_sample_next",
+          'heads.get("screened", ...).sample(key, h, ...)')
+    return ScreenedHead(W, b, screen).sample(key, h, temperature, top_p)

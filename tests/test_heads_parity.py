@@ -1,0 +1,198 @@
+"""Parametrized parity suite: every registered head must return the exact
+softmax top-k on a fixture where its candidate set provably contains the
+true top-k.
+
+Exactness configs per backend (candidate pool = full vocabulary):
+  screened / screened-cpu  all-ones candidate mask
+  screened-pallas          all-blocks mask, L % 128 != 0 (padding path)
+  svd                      full rank + rerank pool = L
+  shortlist                n_head = L (head covers the vocab, no tails)
+  greedy-mips              budget = L · min(d, 32) → per-dim lists cover L
+  lsh-mips                 bits = 0 → one bucket holding the whole database
+  pca-mips                 depth = 0 → a single leaf holding the database
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import heads
+from repro.core.screening import ScreenParams, candidates_to_padded
+
+L, D, R, N, K = 200, 32, 4, 16, 5
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((L, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(L) * 0.1, jnp.float32)
+    h = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((R, D)), jnp.float32)
+
+    mask = np.ones((R, L), bool)                       # full-coverage screen
+    idx, lens = candidates_to_padded(mask, L)
+    screen = ScreenParams(v=v, cand_idx=jnp.asarray(idx),
+                          cand_len=jnp.asarray(lens), vocab_size=L)
+
+    n_blk = -(-L // 128)                               # block screen, L%128≠0
+    assert L % 128 != 0
+    maskb = np.ones((R, n_blk), bool)
+    idxb, lensb = candidates_to_padded(maskb, L, block=128)
+    screen_blk = ScreenParams(v=v, cand_idx=jnp.asarray(idxb),
+                              cand_len=jnp.asarray(lensb), vocab_size=L,
+                              block=128)
+
+    exact_ids, exact_vals = heads.get("exact", W=W, b=b).topk(h, K)
+    return dict(W=W, b=b, h=h, screen=screen, screen_blk=screen_blk,
+                exact_ids=np.asarray(exact_ids))
+
+
+# (registry name, exactness kwargs, which screen the head needs)
+CASES = [
+    ("exact", {}, None),
+    ("screened", {}, "screen"),
+    ("screened-cpu", {}, "screen"),
+    ("screened-pallas", {}, "screen_blk"),
+    ("svd", dict(rho=D, n_top=L), None),
+    ("shortlist", dict(n_head=L), None),
+    ("greedy-mips", dict(budget=L * 32), None),
+    ("lsh-mips", dict(bands=2, bits=0), None),
+    ("pca-mips", dict(depth=0), None),
+]
+
+
+def _build(fixture, name, kw, screen_key):
+    ctx = dict(W=fixture["W"], b=fixture["b"], **kw)
+    if screen_key is not None:
+        ctx["screen"] = fixture[screen_key]
+    return heads.get(name, **ctx)
+
+
+def test_registry_covers_required_backends():
+    names = heads.names()
+    for required in ["exact", "screened", "screened-pallas", "svd",
+                     "shortlist", "greedy-mips", "lsh-mips", "pca-mips"]:
+        assert required in names, names
+    assert len(names) >= 6
+    assert {name for name, _, _ in CASES} == set(names), \
+        "parity suite must cover every registered head"
+
+
+@pytest.mark.parametrize("name,kw,screen_key", CASES,
+                         ids=[c[0] for c in CASES])
+def test_topk_parity_with_exact(fixture, name, kw, screen_key):
+    head = _build(fixture, name, kw, screen_key)
+    ids, vals = head.topk(fixture["h"], K)
+    ids = np.asarray(ids)
+    exact = fixture["exact_ids"]
+    assert ids.shape == (N, K)
+    # identical top-k sets, identical argmax
+    for i in range(N):
+        assert set(ids[i].tolist()) == set(exact[i].tolist()), (name, i)
+    np.testing.assert_array_equal(ids[:, 0], exact[:, 0])
+    # scores finite (no sentinel −inf leaked into a full-coverage top-k)
+    assert np.all(np.asarray(vals, np.float32) > -1e29)
+
+
+@pytest.mark.parametrize("name,kw,screen_key", CASES,
+                         ids=[c[0] for c in CASES])
+def test_next_and_logprobs_consistent(fixture, name, kw, screen_key):
+    head = _build(fixture, name, kw, screen_key)
+    nxt = np.asarray(head.next(fixture["h"]))
+    np.testing.assert_array_equal(nxt, fixture["exact_ids"][:, 0])
+    ids, lp = head.topk_logprobs(fixture["h"], K)
+    lp = np.asarray(lp, np.float32)
+    assert np.all(lp <= 1e-6)                      # log-probs
+    assert np.all(np.diff(lp, axis=1) <= 1e-6)     # sorted descending
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0],
+                                  fixture["exact_ids"][:, 0])
+
+
+@pytest.mark.parametrize("name,kw,screen_key",
+                         [c for c in CASES if c[0] != "exact"],
+                         ids=[c[0] for c in CASES if c[0] != "exact"])
+def test_sample_stays_in_vocab_and_greedy_at_t0(fixture, name, kw, screen_key):
+    head = _build(fixture, name, kw, screen_key)
+    s = np.asarray(head.sample(jax.random.key(0), fixture["h"],
+                               temperature=1.0))
+    assert s.shape == (N,) and s.min() >= 0 and s.max() < L
+    g = np.asarray(head.sample(jax.random.key(1), fixture["h"],
+                               temperature=0.0))
+    np.testing.assert_array_equal(g, fixture["exact_ids"][:, 0])
+
+
+def test_sample_nucleus_truncation_and_variance(fixture):
+    """sample_from_logits contract through a head: a vanishing nucleus
+    (top_p → 0) degenerates to argmax at any temperature, and high
+    temperature actually varies across keys."""
+    head = heads.get("exact", W=fixture["W"], b=fixture["b"])
+    h = fixture["h"]
+    tight = np.asarray(head.sample(jax.random.key(0), h, temperature=1.0,
+                                   top_p=1e-6))
+    np.testing.assert_array_equal(tight, fixture["exact_ids"][:, 0])
+    a = np.asarray(head.sample(jax.random.key(3), h, temperature=5.0))
+    c = np.asarray(head.sample(jax.random.key(4), h, temperature=5.0))
+    assert not np.array_equal(a, c)
+    # top_p keeps high-probability tokens reachable: with top_p=0.9 every
+    # draw is inside the full vocab and argmax is still drawable
+    s = np.asarray(head.sample(jax.random.key(5), h, temperature=1.0,
+                               top_p=0.9))
+    assert s.min() >= 0 and s.max() < L
+
+
+def test_baseline_small_vocab_pool_and_empty_bucket():
+    """Regression: norm_pool > n_head must not crash shortlist logprobs /
+    sampling, and an empty LSH bucket must not leak the sentinel id."""
+    rng = np.random.default_rng(5)
+    W = jnp.asarray(rng.standard_normal((L, D)), jnp.float32)
+    b = jnp.zeros((L,), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    short = heads.get("shortlist", W=W, b=b)       # default n_head = L//10
+    ids, lp = short.topk_logprobs(h, K)            # pool(64) > n_head(20)
+    assert ids.shape == (N, K)
+    s = short.sample(jax.random.key(0), h, temperature=1.0)
+    assert s.min() >= 0 and s.max() < L
+    # many-bit LSH on a tiny vocab → most buckets empty
+    lsh = heads.get("lsh-mips", W=W, b=b, bands=2, bits=10)
+    nxt = np.asarray(lsh.next(h))
+    assert nxt.min() >= 0 and nxt.max() < L        # never the sentinel
+    ids, lp = lsh.topk_logprobs(h, K)
+    lp = np.asarray(lp)
+    sentinel = np.asarray(ids) >= L
+    assert np.all(lp[sentinel] <= -1e29)           # no mass on missing words
+
+
+def test_metadata_present():
+    fix_rng = np.random.default_rng(1)
+    W = jnp.asarray(fix_rng.standard_normal((64, 8)), jnp.float32)
+    b = jnp.zeros((64,), jnp.float32)
+    head = heads.get("exact", W=W, b=b)
+    d = head.describe()
+    assert d["name"] == "exact" and d["is_jittable"] is True
+    assert d["flops_per_query"] == 64 * 8
+    svd = heads.get("svd", W=W, b=b, rho=4, n_top=16)
+    assert svd.device_kind == "numpy" and svd.is_jittable is False
+    assert np.isfinite(svd.flops_per_query)
+
+
+def test_screen_params_is_pytree():
+    """ScreenParams flattens/unflattens and crosses jit boundaries as an
+    argument (not a closure constant)."""
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    sp = ScreenParams(v=v, cand_idx=jnp.zeros((3, 8), jnp.int32),
+                      cand_len=jnp.ones((3,), jnp.int32), vocab_size=40,
+                      block=1)
+    leaves, treedef = jax.tree_util.tree_flatten(sp)
+    assert len(leaves) == 3
+    sp2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert sp2.vocab_size == 40 and sp2.block == 1
+
+    @jax.jit
+    def through_jit(screen, h):
+        return jnp.einsum("bd,rd->br", h, screen.v)
+
+    h = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    out = through_jit(sp, h)
+    assert out.shape == (2, 3)

@@ -1,0 +1,61 @@
+"""Regression: the vectorized ``candidates_to_padded`` scatter must match
+the original per-row Python loop bit-for-bit."""
+import numpy as np
+import pytest
+
+from repro.core.screening import candidates_to_padded
+
+
+def _reference_loop(mask, vocab_size, block=1, pad_to_multiple=8):
+    """The original O(r·C_max) implementation, kept verbatim as the oracle."""
+    r, n_items = mask.shape
+    lens = mask.sum(axis=1)
+    c_max = int(max(int(lens.max(initial=1)), 1))
+    c_max = -(-c_max // pad_to_multiple) * pad_to_multiple
+    idx = np.full((r, c_max), n_items, np.int32)
+    for t in range(r):
+        ids = np.nonzero(mask[t])[0]
+        idx[t, :len(ids)] = ids
+    return idx, lens.astype(np.int32)
+
+
+@pytest.mark.parametrize("r,n_items,density,seed", [
+    (1, 1, 1.0, 0),
+    (5, 40, 0.3, 1),
+    (16, 500, 0.05, 2),
+    (100, 2000, 0.01, 3),
+    (8, 64, 1.0, 4),
+])
+def test_matches_loop_bit_for_bit(r, n_items, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((r, n_items)) < density
+    got_idx, got_len = candidates_to_padded(mask, n_items)
+    ref_idx, ref_len = _reference_loop(mask, n_items)
+    np.testing.assert_array_equal(got_idx, ref_idx)
+    np.testing.assert_array_equal(got_len, ref_len)
+    assert got_idx.dtype == ref_idx.dtype and got_len.dtype == ref_len.dtype
+
+
+def test_empty_rows_and_all_empty():
+    mask = np.zeros((4, 32), bool)
+    mask[1, [3, 7, 31]] = True               # rows 0/2/3 stay empty
+    got_idx, got_len = candidates_to_padded(mask, 32)
+    ref_idx, ref_len = _reference_loop(mask, 32)
+    np.testing.assert_array_equal(got_idx, ref_idx)
+    np.testing.assert_array_equal(got_len, ref_len)
+    all_empty = np.zeros((3, 16), bool)
+    got_idx, got_len = candidates_to_padded(all_empty, 16)
+    ref_idx, ref_len = _reference_loop(all_empty, 16)
+    np.testing.assert_array_equal(got_idx, ref_idx)
+    np.testing.assert_array_equal(got_len, ref_len)
+
+
+def test_pad_to_multiple_and_sentinel():
+    rng = np.random.default_rng(9)
+    mask = rng.random((6, 100)) < 0.1
+    idx, lens = candidates_to_padded(mask, 100, pad_to_multiple=8)
+    assert idx.shape[1] % 8 == 0
+    for t in range(6):
+        assert np.all(idx[t, lens[t]:] == 100)        # sentinel = n_items
+        np.testing.assert_array_equal(np.sort(idx[t, :lens[t]]),
+                                      np.nonzero(mask[t])[0])

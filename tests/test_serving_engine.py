@@ -1,16 +1,17 @@
-"""Serving engine: greedy == teacher-forced argmax; beam ≥ greedy score;
-screened decode; cache reordering under beam search."""
+"""Serving engine on the SoftmaxHead API: greedy == teacher-forced argmax;
+beam ≥ greedy score; screened decode; kernel-head decode; per-request head
+switching; cache reordering under beam search; deprecated sampling shims."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import heads
 from repro.configs import L2SConfig, get_config
 from repro.core import fit_l2s
 from repro.core.screening import ScreenParams, candidates_to_padded
 from repro.models import build_model
 from repro.serving import DecodeEngine
-from repro.serving.sampling import screened_topk_logprobs, topk_logprobs
 
 
 @pytest.mark.parametrize("arch", ["ptb-small-lstm", "smollm-360m",
@@ -36,7 +37,6 @@ def test_beam_score_at_least_greedy():
     params = m.init(jax.random.key(0), dtype=jnp.float32)
     eng = DecodeEngine(m, params, max_len=24)
     prompt = np.asarray([1, 2, 3, 4], np.int32)
-    W, b = m.softmax_weights(params)
 
     def seq_logprob(tokens):
         full = np.concatenate([prompt, tokens])
@@ -64,17 +64,17 @@ def test_screened_logprobs_subset_normalization():
                       cand_idx=jnp.asarray(idx), cand_len=jnp.asarray(lens),
                       vocab_size=L)
     h = jnp.asarray(rng.standard_normal((2, d)), jnp.float32)
-    ids, lp = screened_topk_logprobs(W, b, sp, h, k=10)
+    screened = heads.get("screened", W=W, b=b, screen=sp)
+    ids, lp = screened.topk_logprobs(h, 10)
     # probabilities over the 10-word candidate set sum to 1
     np.testing.assert_allclose(np.asarray(jnp.exp(lp).sum(-1)), 1.0, atol=1e-4)
     # and differ from full-vocab normalization
-    _, lp_full = topk_logprobs(W, b, h, k=10)
+    _, lp_full = heads.get("exact", W=W, b=b).topk_logprobs(h, 10)
     assert float(jnp.exp(lp_full).sum()) < 2.0
 
 
-def test_screened_decode_end_to_end():
-    """With a screen trained on the model's own behavior, screened greedy
-    decode agrees with exact decode on most tokens."""
+def _trained_screen_setup(vocab_block=None, steps=60, budget=64, clusters=16,
+                          sgd_steps=50):
     from repro.core import collect_contexts
     from repro.data import ZipfMarkovCorpus, make_lm_batches
     from repro.launch.steps import make_train_step
@@ -85,70 +85,114 @@ def test_screened_decode_end_to_end():
     m = build_model(cfg)
     params = m.init(jax.random.key(0), dtype=jnp.float32)
     corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=32, seed=3)
-    tcfg = TrainConfig(lr=2e-3, total_steps=60, warmup_steps=5,
-                       remat="none", loss_chunk=None)
+    tcfg = TrainConfig(lr=2e-3, total_steps=steps, warmup_steps=5,
+                      remat="none", loss_chunk=None)
     step = jax.jit(make_train_step(m, tcfg))
     opt = adamw_init(params)
-    for batch in make_lm_batches(corpus, 60, 8, 32, seed=1):
+    for batch in make_lm_batches(corpus, steps, 8, 32, seed=1):
         params, opt, _ = step(params, opt,
                               {k: jnp.asarray(v) for k, v in batch.items()})
     H, y = collect_contexts(
         m, params, [jnp.asarray(b["tokens"])
                     for b in make_lm_batches(corpus, 8, 8, 32, seed=9)],
         max_vectors=2000)
-    st = fit_l2s(H, y, cfg.vocab_size,
-                 L2SConfig(num_clusters=16, budget=64, outer_iters=1,
-                           sgd_steps=50))
+    l2s_kwargs = dict(num_clusters=clusters, budget=budget, outer_iters=1,
+                      sgd_steps=sgd_steps)
+    if vocab_block is not None:
+        l2s_kwargs["vocab_block"] = vocab_block
+    st = fit_l2s(H, y, cfg.vocab_size, L2SConfig(**l2s_kwargs))
+    return cfg, m, params, corpus, st
+
+
+def test_screened_decode_end_to_end():
+    """With a screen trained on the model's own behavior, screened greedy
+    decode agrees with exact decode on most tokens — heads switched per
+    request on ONE engine."""
+    cfg, m, params, corpus, st = _trained_screen_setup()
     eng = DecodeEngine(m, params, screen=st.screen, max_len=40)
     prompts = corpus.sample_batch(4, 8, seed=5)
-    exact = eng.generate(prompts, 12, use_screen=False)
-    fast = eng.generate(prompts, 12, use_screen=True)
+    exact = eng.generate(prompts, 12, head="exact")
+    fast = eng.generate(prompts, 12, head="screened")
     agree = float((exact.tokens == fast.tokens).mean())
     assert agree > 0.7, agree
 
 
 def test_kernel_screened_decode_matches_jnp_path():
-    """DecodeEngine kernel head (Pallas block-candidate path) must produce
-    the same tokens as the jnp screened path given the same block screen."""
-    from repro.configs import L2SConfig, TrainConfig
-    from repro.core import collect_contexts
-    from repro.data import ZipfMarkovCorpus, make_lm_batches
-    from repro.launch.steps import make_train_step
-    from repro.optim import adamw_init
-
-    cfg = get_config("ptb-small-lstm").reduced()
-    m = build_model(cfg)
-    params = m.init(jax.random.key(0), dtype=jnp.float32)
-    corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=32, seed=3)
-    tcfg = TrainConfig(lr=2e-3, total_steps=40, warmup_steps=5,
-                       remat="none", loss_chunk=None)
-    step = jax.jit(make_train_step(m, tcfg))
-    opt = adamw_init(params)
-    for batch in make_lm_batches(corpus, 40, 8, 32, seed=1):
-        params, opt, _ = step(params, opt,
-                              {k: jnp.asarray(v) for k, v in batch.items()})
-    H, y = collect_contexts(
-        m, params, [jnp.asarray(b["tokens"])
-                    for b in make_lm_batches(corpus, 4, 8, 32, seed=9)],
-        max_vectors=1000)
-    st = fit_l2s(H, y, cfg.vocab_size,
-                 L2SConfig(num_clusters=8, budget=256, outer_iters=1,
-                           sgd_steps=30, vocab_block=128))
+    """The Pallas block-candidate head must produce the same tokens as the
+    jnp screened head given the same block screen — resolved by name from
+    the same engine, no use_kernel flag."""
+    cfg, m, params, corpus, st = _trained_screen_setup(
+        vocab_block=128, steps=40, budget=256, clusters=8, sgd_steps=30)
     assert st.screen.block == 128
     prompts = corpus.sample_batch(2, 6, seed=5)
-    eng_jnp = DecodeEngine(m, params, screen=st.screen, max_len=20)
-    eng_krn = DecodeEngine(m, params, screen=st.screen, max_len=20,
-                           use_kernel=True)
-    out_jnp = eng_jnp.generate(prompts, 8, use_screen=True)
-    out_krn = eng_krn.generate(prompts, 8, use_screen=True)
+    eng = DecodeEngine(m, params, screen=st.screen, max_len=20)
+    out_jnp = eng.generate(prompts, 8, head="screened")
+    out_krn = eng.generate(prompts, 8, head="screened-pallas")
     np.testing.assert_array_equal(out_jnp.tokens, out_krn.tokens)
 
 
-def test_sampling_full_and_screened():
-    """Temperature/nucleus sampling: screened samples stay inside the routed
-    candidate set; temperature→0 degenerates to greedy; top_p truncates."""
-    from repro.serving.sampling import (sample_next, screened_sample_next,
-                                        greedy_next)
+def test_engine_rejects_legacy_flags():
+    """The use_screen/use_kernel calling convention is gone."""
+    cfg = get_config("ptb-small-lstm").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    eng = DecodeEngine(m, params, max_len=16)
+    prompts = np.zeros((1, 4), np.int32)
+    with pytest.raises(TypeError):
+        eng.generate(prompts, 2, use_screen=True)
+    with pytest.raises(TypeError):
+        DecodeEngine(m, params, use_kernel=True)
+
+
+def test_engine_sampling_routes_through_head():
+    """Sampling decode: temperature 0 reproduces greedy; screened sampling
+    stays inside the routed candidate sets."""
+    cfg, m, params, corpus, st = _trained_screen_setup()
+    eng = DecodeEngine(m, params, screen=st.screen, max_len=30)
+    prompts = corpus.sample_batch(2, 6, seed=11)
+    greedy = eng.generate(prompts, 6)
+    t0 = eng.generate(prompts, 6, temperature=0.0)
+    np.testing.assert_array_equal(greedy.tokens, t0.tokens)
+    s = eng.generate(prompts, 6, temperature=1.2, top_p=0.9,
+                     key=jax.random.key(2))
+    assert s.tokens.shape == (2, 6)
+    assert s.tokens.max() < cfg.vocab_size
+    with pytest.raises(ValueError):
+        eng.generate(prompts, 2, temperature=1.0)     # key required
+    # screened sampling: every sampled token ∈ its step's candidate union
+    allowed = set()
+    cand = np.asarray(st.screen.cand_idx)
+    for t in range(cand.shape[0]):
+        allowed |= set((cand[t][cand[t] < cfg.vocab_size]).tolist())
+    ss = eng.generate(prompts, 6, head="screened", temperature=1.0,
+                      key=jax.random.key(3))
+    assert set(ss.tokens.reshape(-1).tolist()) <= allowed
+
+
+def test_numpy_baseline_head_decodes():
+    """A non-jittable (numpy) head runs on the host side of the jitted
+    decode step — greedy and beam both work, and an exact-config SVD head
+    matches the exact head token-for-token."""
+    cfg = get_config("ptb-small-lstm").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    eng = DecodeEngine(m, params, max_len=20,
+                       head_kwargs=dict(rho=cfg.d_model,
+                                        n_top=cfg.vocab_size))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 5)).astype(np.int32)
+    exact = eng.generate(prompts, 6, head="exact")
+    svd = eng.generate(prompts, 6, head="svd")
+    np.testing.assert_array_equal(exact.tokens, svd.tokens)
+    bm = eng.beam_search(prompts[0], beam=3, max_new=4, head="svd")
+    assert bm.tokens.shape == (1, 4)
+
+
+def test_sampling_shims_deprecated():
+    """The old serving.sampling functions still work but warn, and agree
+    with their head equivalents."""
+    from repro.serving.sampling import (greedy_next, sample_next,
+                                        screened_greedy_next, topk_logprobs)
     rng = np.random.default_rng(0)
     L, d, r = 64, 8, 4
     W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
@@ -160,24 +204,19 @@ def test_sampling_full_and_screened():
                       cand_idx=jnp.asarray(idx), cand_len=jnp.asarray(lens),
                       vocab_size=L)
     h = jnp.asarray(rng.standard_normal((6, d)), jnp.float32)
-
-    # temperature 0 == greedy
+    with pytest.deprecated_call():
+        g = greedy_next(W, b, h)
     np.testing.assert_array_equal(
-        np.asarray(sample_next(jax.random.key(0), W, b, h, temperature=0.0)),
-        np.asarray(greedy_next(W, b, h)))
-    # screened samples ⊆ candidate set, at any temperature
-    for t in (0.5, 1.0, 2.0):
-        s = screened_sample_next(jax.random.key(1), W, b, sp, h,
-                                 temperature=t)
-        assert int(jnp.max(s)) < 16
-    # tight nucleus → only the argmax survives
-    s = sample_next(jax.random.key(2), W, b, h, temperature=1.0, top_p=1e-6)
-    np.testing.assert_array_equal(np.asarray(s),
-                                  np.asarray(greedy_next(W, b, h)))
-    # sampling actually varies across keys at high temperature
-    a = sample_next(jax.random.key(3), W, b, h, temperature=5.0)
-    c = sample_next(jax.random.key(4), W, b, h, temperature=5.0)
-    assert not np.array_equal(np.asarray(a), np.asarray(c))
+        np.asarray(g), np.asarray(heads.get("exact", W=W, b=b).next(h)))
+    with pytest.deprecated_call():
+        s = screened_greedy_next(W, b, sp, h)
+    assert int(jnp.max(s)) < 16
+    with pytest.deprecated_call():
+        ids, lp = topk_logprobs(W, b, h, k=5)
+    assert ids.shape == (6, 5)
+    with pytest.deprecated_call():
+        t0 = sample_next(jax.random.key(0), W, b, h, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(g))
 
 
 def test_train_launcher_checkpoint_resume(tmp_path):
