@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -86,6 +87,15 @@ def run(k: int = 5):
     for label, name, kw in competitor_rows:
         assert name in registered, f"{name} missing from head registry"
         report(label, heads.get(name, **head_context(W, b, **kw)))
+
+    # --- vocab-sharded heads (multi-device only; flops are PER SHARD —
+    #     see benchmarks/README.md for how to read them) ---
+    if jax.device_count() > 1:
+        for name in ("exact-sharded", "screened-sharded"):
+            head = heads.get(name, **head_context(W, b, screen=state.screen))
+            csv_row(f"table1/{name}", float("nan"),
+                    f"shards={head.n_shards},"
+                    f"flops_per_shard={head.flops_per_query:.0f}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,11 @@ One protocol (``SoftmaxHead``), one registry, every backend:
 Registered backends (see each class for the cost model):
 
   exact           full-vocab softmax                      O(L·d)
+  exact-sharded   vocab-sharded exact: per-shard top-k    O(L/n·d) per shard
+                  + all-gather merge over a "model" mesh
   screened        L2S route + candidate softmax (jnp)     O((r+L̄)·d)
+  screened-sharded L2S with candidate blocks placed on    O((r+L̄/n)·d) per shard
+                  the shard owning their vocab range
   screened-pallas L2S on the Pallas TPU kernels           O((r+L̄)·d)
   screened-cpu    L2S per-query numpy (paper timing)      O((r+L̄)·d)
   svd             SVD-softmax preview + rerank            O(d·ρ + L·ρ + Ñ·d)
@@ -28,12 +32,19 @@ from repro.heads.registry import get, names, register
 from repro.heads.exact import ExactHead
 from repro.heads.screened import ScreenedHead
 from repro.heads.pallas import ScreenedPallasHead
+from repro.heads.sharded import ExactShardedHead, ScreenedShardedHead
 from repro.heads.adapters import (BaselineHead, GreedyMIPSHead, LSHHead,
                                   PCAHead, ScreenedNumpyHead, ShortlistHead,
                                   SVDHead)
 
 register("exact", lambda W, b, **_: ExactHead(W, b))
+register("exact-sharded",
+         lambda W, b, mesh=None, n_shards=None, **_:
+         ExactShardedHead(W, b, mesh=mesh, n_shards=n_shards))
 register("screened", lambda W, b, screen, **_: ScreenedHead(W, b, screen))
+register("screened-sharded",
+         lambda W, b, screen, mesh=None, n_shards=None, **_:
+         ScreenedShardedHead(W, b, screen, mesh=mesh, n_shards=n_shards))
 register("screened-pallas",
          lambda W, b, screen, interpret=True, **_:
          ScreenedPallasHead(W, b, screen, interpret=interpret))

@@ -51,6 +51,10 @@ class SoftmaxHead:
     name: str = "abstract"
     device_kind: str = "jax"
     is_jittable: bool = True
+    # vocab-sharded heads set this to their jax.sharding.Mesh in prepare();
+    # the serving engine uses it to build mesh-aware jitted decode steps
+    # (inputs replicated over the head's device set instead of device 0)
+    mesh = None
 
     def prepare(self) -> "SoftmaxHead":
         """One-time packing / table builds. Idempotent."""
@@ -97,12 +101,17 @@ def sample_from_logits(key, logits, temperature: float, top_p: float):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        # Mask by sorted RANK, not by value: a `logits >= cutoff` test keeps
+        # every position tied with the cutoff logit, which can exceed the
+        # nucleus when duplicates exist. Stable argsort of -logits gives the
+        # descending order with ties broken by lowest index (the top-k
+        # convention); rank < k_keep keeps exactly the smallest prefix.
+        order = jnp.argsort(-logits, axis=-1)
+        sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        # smallest prefix with mass ≥ top_p; cutoff = last kept logit
+        # smallest prefix with mass ≥ top_p
         k_keep = jnp.sum(cum < top_p, axis=-1) + 1
-        cutoff = jnp.take_along_axis(sorted_logits,
-                                     (k_keep - 1)[:, None], axis=-1)
-        logits = jnp.where(logits >= cutoff, logits, NEG_INF)
+        rank = jnp.argsort(order, axis=-1)
+        logits = jnp.where(rank < k_keep[:, None], logits, NEG_INF)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

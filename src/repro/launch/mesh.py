@@ -7,6 +7,7 @@ smoke tests must keep seeing 1 device.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 # TPU v5e hardware constants used by the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
@@ -18,6 +19,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(model: int = None, *, data: int = 1):
+    """Small mesh over the LOCAL devices for multi-device tests and the
+    vocab-sharded heads: the first ``data * model`` devices reshaped to
+    ("data", "model"). ``model=None`` uses every device not claimed by
+    ``data``. Pairs with the 8-simulated-host-device test harness
+    (tests/conftest.py sets --xla_force_host_platform_device_count=8)."""
+    devs = jax.devices()
+    if model is None:
+        model = max(len(devs) // data, 1)
+    need = data * model
+    if len(devs) < need:
+        raise ValueError(f"make_test_mesh needs {need} devices, have "
+                         f"{len(devs)} (force host devices via XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={need})")
+    arr = np.asarray(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

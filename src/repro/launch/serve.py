@@ -29,6 +29,11 @@ def main(argv=None):
     ap.add_argument("--arch", default="ptb-small-lstm")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--l2s", action="store_true")
+    ap.add_argument("--head", default=None,
+                    help="registry name of the fast decode head served "
+                         "against exact (screened, screened-sharded, "
+                         "exact-sharded, screened-pallas, ...); defaults "
+                         "to screened when --l2s fits a screen")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -80,12 +85,23 @@ def main(argv=None):
     t_exact = time.time() - t0
     print(f"[serve] exact decode: {args.requests}×{args.max_new} tokens "
           f"in {t_exact:.2f}s")
-    if screen is not None:
+    # fast pass: an explicit --head, or "screened" once --l2s fitted a screen
+    head_name = args.head if args.head is not None else \
+        ("screened" if screen is not None else None)
+    if head_name is not None and head_name != "exact":
+        try:
+            fast_head = engine.resolve_head(head_name)
+        except AssertionError as e:
+            # screening heads without a fitted screen name fit_l2s in their
+            # assertion — surface it with the fix instead of silently skipping
+            print(f"[serve] cannot build head {head_name!r}: {e} "
+                  f"(pass --l2s to fit one)")
+            return 2
         t0 = time.time()
-        fast = engine.generate(prompts, args.max_new, head="screened")
-        t_l2s = time.time() - t0
+        fast = engine.generate(prompts, args.max_new, head=fast_head)
+        t_fast = time.time() - t0
         agree = float((fast.tokens == exact.tokens).mean())
-        print(f"[serve] L2S decode:  {t_l2s:.2f}s  "
+        print(f"[serve] {head_name} decode:  {t_fast:.2f}s  "
               f"token agreement {agree:.3f}")
     return 0
 

@@ -264,6 +264,27 @@ def cache_shardings(mesh, cfg: ModelConfig, abstract_cache,
     return jax.tree_util.tree_map_with_path(f, abstract_cache)
 
 
+def vocab_sharded(mesh, ndim: int, axis: int = 0) -> NamedSharding:
+    """NamedSharding partitioning ``axis`` of an ndim-array over "model" —
+    the vocab-axis placement rule shared by the sharded softmax heads."""
+    spec = [None] * ndim
+    spec[axis] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def head_shardings(mesh) -> dict:
+    """Placements for a vocab-sharded softmax head (repro.heads.sharded):
+    (W (L, d), b (L,)) row-partitioned over "model"; routing weights and
+    queries replicated; per-shard candidate tables (n_shards, r, C) sharded
+    on their leading shard axis."""
+    return {
+        "W": vocab_sharded(mesh, 2),
+        "b": vocab_sharded(mesh, 1),
+        "cand": vocab_sharded(mesh, 3),
+        "replicated": NamedSharding(mesh, P()),
+    }
+
+
 def screen_shardings(mesh, abstract_screen):
     """L2S screening params: v (r, d) and cand_idx (r, K) are small —
     replicated in the baseline (the vocab-sharded L2S variant lives in the

@@ -14,7 +14,10 @@ engine init; per-head composed steps (decode + head.next) are jitted once
 per head and cached, and head-side top-k/log-prob functions are
 module-level jits with static k — nothing re-wraps ``jax.jit`` per
 invocation. Non-jittable heads (the numpy §4.1 baselines) run on the host
-side of the jitted decode step.
+side of the jitted decode step. Vocab-SHARDED heads (``head.mesh`` set)
+get a mesh-aware composed step: inputs are pinned replicated over the
+head's mesh via ``in_shardings`` so the decode step and the head's
+shard_map share one device set — still one compilation per head.
 
 Beam search follows the paper's §4.2 protocol: log-softmax over the head's
 reduced candidate space, probability 0 (−inf log-prob) elsewhere.
@@ -85,6 +88,26 @@ class DecodeEngine:
         return head.prepare()
 
     # -- per-head jitted steps (built once, cached) --------------------------
+    def _mesh_aware_jit(self, head: SoftmaxHead, step, n_placed: int):
+        """jit a composed decode step for a vocab-SHARDED head: the head's
+        weights live across ``head.mesh``, so the step's other inputs (params,
+        token, cache — the first ``n_placed`` positional args) must join that
+        device set. ``in_shardings`` pins them replicated over the mesh, and
+        the wrapper device_puts each call so committed single-device arrays
+        (e.g. the prefill cache) reshard instead of erroring; once outputs
+        come back mesh-placed, the device_put is a no-op. The jitted callable
+        is built ONCE here and cached like every other step — no per-step
+        re-jitting."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        repl = NamedSharding(head.mesh, PartitionSpec())
+        jitted = jax.jit(step, in_shardings=repl)
+
+        def fn(*args):
+            placed = jax.device_put(args[:n_placed], repl)
+            return jitted(*placed, *args[n_placed:])
+        fn._inner_jit = jitted
+        return fn
+
     def _greedy_step(self, head: SoftmaxHead):
         key = (head, "greedy")
         if key not in self._step_cache:
@@ -92,7 +115,10 @@ class DecodeEngine:
                 def step(params, tok, cache, pos):
                     h, cache = self.model.decode_step(params, tok, cache, pos)
                     return head.next(h), h, cache
-                fn = jax.jit(step)
+                if head.mesh is not None:
+                    fn = self._mesh_aware_jit(head, step, n_placed=3)
+                else:
+                    fn = jax.jit(step)
             else:
                 def fn(params, tok, cache, pos):
                     h, cache = self._jit_decode(params, tok, cache, pos)
@@ -115,7 +141,10 @@ class DecodeEngine:
                 def step(params, rkey, tok, cache, pos):
                     h, cache = self.model.decode_step(params, tok, cache, pos)
                     return head.sample(rkey, h, temperature, top_p), h, cache
-                fn = jax.jit(step)
+                if head.mesh is not None:
+                    fn = self._mesh_aware_jit(head, step, n_placed=4)
+                else:
+                    fn = jax.jit(step)
             else:
                 def fn(params, rkey, tok, cache, pos):
                     h, cache = self._jit_decode(params, tok, cache, pos)

@@ -1,9 +1,54 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
-tests and benches must see the single real CPU device (the 512-device
-override belongs exclusively to repro.launch.dryrun)."""
-import jax
-import numpy as np
-import pytest
+"""Shared fixtures + the multi-device test harness.
+
+The suite runs on SIMULATED host devices: ``_force_host_devices`` appends
+``--xla_force_host_platform_device_count=N`` (default 8, override with
+``REPRO_TEST_DEVICE_COUNT``) to XLA_FLAGS before jax's first import, which is
+the only moment the device count can be set. The guard makes it a no-op when
+jax was already imported (e.g. under a driver that pre-initialized it) or
+when XLA_FLAGS already carries an explicit count (repro.launch.dryrun's 512).
+
+Tests that REQUIRE several devices take the ``multidevice`` fixture (skips
+below 8 devices instead of failing) and carry ``@pytest.mark.multidevice``
+so CI can split the matrix: the default job runs single-device with
+``REPRO_TEST_DEVICE_COUNT=1 pytest -m "not multidevice"``, the multidevice
+job runs ``pytest -m multidevice`` on the forced 8-device host platform.
+"""
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _force_host_devices(n: int) -> None:
+    if "jax" in sys.modules:        # jax already initialized — too late
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG in flags:              # explicit override wins (dryrun: 512)
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}={n}".strip()
+
+
+_force_host_devices(int(os.environ.get("REPRO_TEST_DEVICE_COUNT", "8")))
+
+import jax                 # noqa: E402  (must come after the XLA_FLAGS setup)
+import numpy as np         # noqa: E402
+import pytest              # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs >= 8 (simulated) host devices; skipped when the "
+        "platform has fewer (see tests/conftest.py)")
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    """The 8 simulated host devices backing the sharded-head test matrix."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices — run with XLA_FLAGS="
+                    f"{_FLAG}=8 (tests/conftest.py sets it by default)")
+    return jax.devices()[:8]
 
 
 @pytest.fixture(scope="session")

@@ -5,11 +5,18 @@ true top-k.
 Exactness configs per backend (candidate pool = full vocabulary):
   screened / screened-cpu  all-ones candidate mask
   screened-pallas          all-blocks mask, L % 128 != 0 (padding path)
+  exact-sharded            vocab-sharded exact (default mesh = all devices)
+  screened-sharded         vocab-sharded L2S, same all-ones mask
   svd                      full rank + rerank pool = L
   shortlist                n_head = L (head covers the vocab, no tails)
   greedy-mips              budget = L · min(d, 32) → per-dim lists cover L
   lsh-mips                 bits = 0 → one bucket holding the whole database
   pca-mips                 depth = 0 → a single leaf holding the database
+
+The SHARDED parity matrix below additionally pins the sharded heads to
+{1, 2, 8} shards (2/8 need the 8-device harness from conftest) on a vocab
+NOT divisible by the shard count (padding path), with k both below and above
+L/n_shards, asserting ids bit-identical to the unsharded counterparts.
 """
 import jax
 import jax.numpy as jnp
@@ -51,7 +58,9 @@ def fixture():
 # (registry name, exactness kwargs, which screen the head needs)
 CASES = [
     ("exact", {}, None),
+    ("exact-sharded", {}, None),
     ("screened", {}, "screen"),
+    ("screened-sharded", {}, "screen"),
     ("screened-cpu", {}, "screen"),
     ("screened-pallas", {}, "screen_blk"),
     ("svd", dict(rho=D, n_top=L), None),
@@ -60,6 +69,16 @@ CASES = [
     ("lsh-mips", dict(bands=2, bits=0), None),
     ("pca-mips", dict(depth=0), None),
 ]
+
+# shard counts for the sharded parity matrix; >1 needs the 8-device harness
+SHARD_COUNTS = [1,
+                pytest.param(2, marks=pytest.mark.multidevice),
+                pytest.param(8, marks=pytest.mark.multidevice)]
+
+
+def _require_devices(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices (have {jax.device_count()})")
 
 
 def _build(fixture, name, kw, screen_key):
@@ -71,7 +90,8 @@ def _build(fixture, name, kw, screen_key):
 
 def test_registry_covers_required_backends():
     names = heads.names()
-    for required in ["exact", "screened", "screened-pallas", "svd",
+    for required in ["exact", "exact-sharded", "screened",
+                     "screened-sharded", "screened-pallas", "svd",
                      "shortlist", "greedy-mips", "lsh-mips", "pca-mips"]:
         assert required in names, names
     assert len(names) >= 6
@@ -174,6 +194,115 @@ def test_metadata_present():
     svd = heads.get("svd", W=W, b=b, rho=4, n_top=16)
     assert svd.device_kind == "numpy" and svd.is_jittable is False
     assert np.isfinite(svd.flops_per_query)
+
+
+# -- sharded parity matrix ---------------------------------------------------
+# vocab 203 is NOT divisible by 2 or 8 (padding path); k=40 exceeds
+# L/8 = 26 (local top-k truncation + merge padding path)
+
+LS = 203
+
+
+@pytest.fixture(scope="module")
+def sharded_fixture():
+    rng = np.random.default_rng(7)
+    W = jnp.asarray(rng.standard_normal((LS, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(LS) * 0.1, jnp.float32)
+    h = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((R, D)), jnp.float32)
+    mask = rng.random((R, LS)) < 0.5            # non-trivial candidate sets
+    mask[:, 0] = True
+    idx, lens = candidates_to_padded(mask, LS)
+    screen = ScreenParams(v=v, cand_idx=jnp.asarray(idx),
+                          cand_len=jnp.asarray(lens), vocab_size=LS)
+    return dict(W=W, b=b, h=h, screen=screen,
+                exact=heads.get("exact", W=W, b=b),
+                screened=heads.get("screened", W=W, b=b, screen=screen))
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("k", [K, 40, 120])
+def test_exact_sharded_bit_identical(sharded_fixture, n_shards, k):
+    """exact-sharded == exact: ids bit-identical, scores/logprobs equal to
+    float tolerance, at every shard count, k above and below L/n_shards."""
+    _require_devices(n_shards)
+    fx = sharded_fixture
+    head = heads.get("exact-sharded", W=fx["W"], b=fx["b"],
+                     n_shards=n_shards)
+    assert head.n_shards == n_shards
+    eids, evals = fx["exact"].topk(fx["h"], k)
+    ids, vals = head.topk(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(eids))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(evals),
+                               rtol=1e-6, atol=1e-6)
+    elids, elp = fx["exact"].topk_logprobs(fx["h"], k)
+    lids, lp = head.topk_logprobs(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(lids), np.asarray(elids))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(elp), atol=1e-5)
+    # greedy + temperature-0 sampling agree with exact argmax
+    np.testing.assert_array_equal(np.asarray(head.next(fx["h"])),
+                                  np.asarray(eids)[:, 0])
+    t0 = head.sample(jax.random.key(0), fx["h"], temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(eids)[:, 0])
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("k", [K, 40])
+def test_screened_sharded_matches_screened(sharded_fixture, n_shards, k):
+    """screened-sharded == screened on ids AND logprobs with a non-trivial
+    screen: candidate slabs split by owning shard, including k larger than
+    any single shard's candidate count (gather shorter than k → sentinel
+    padding, exactly like the unsharded candidate-set sentinel)."""
+    _require_devices(n_shards)
+    fx = sharded_fixture
+    head = heads.get("screened-sharded", W=fx["W"], b=fx["b"],
+                     screen=fx["screen"], n_shards=n_shards)
+    assert head.n_shards == n_shards
+    sids, svals = fx["screened"].topk(fx["h"], k)
+    ids, vals = head.topk(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(sids))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(svals),
+                               rtol=1e-5, atol=1e-5)
+    slids, slp = fx["screened"].topk_logprobs(fx["h"], k)
+    lids, lp = head.topk_logprobs(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(lids), np.asarray(slids))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(slp), atol=1e-5)
+    # sampling stays inside the routed candidate set
+    s = np.asarray(head.sample(jax.random.key(1), fx["h"], temperature=1.0))
+    assert s.min() >= 0 and s.max() < LS
+    t0 = head.sample(jax.random.key(2), fx["h"], temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(sids)[:, 0])
+
+
+@pytest.mark.multidevice
+def test_sharded_weights_actually_partitioned(sharded_fixture, multidevice):
+    """prepare() placement: each device holds 1/n of the padded vocab rows,
+    not a replica — the memory-scaling claim the head exists for."""
+    fx = sharded_fixture
+    head = heads.get("exact-sharded", W=fx["W"], b=fx["b"], n_shards=8)
+    Lp = head.Wp.shape[0]
+    assert Lp % 8 == 0 and Lp >= LS
+    shard_rows = {s.data.shape[0] for s in head.Wp.addressable_shards}
+    assert shard_rows == {Lp // 8}
+    assert len(head.Wp.sharding.device_set) == 8
+    scr = heads.get("screened-sharded", W=fx["W"], b=fx["b"],
+                    screen=fx["screen"], n_shards=8)
+    assert {s.data.shape[0] for s in scr.cand_local.addressable_shards} == {1}
+
+
+def test_top_p_tie_regression():
+    """Nucleus sampling with duplicated logits must not keep every position
+    tied with the cutoff: logits [2,2,2,-10,...] at top_p=0.5 keep exactly
+    the first TWO duplicates (rank mask), never the third."""
+    logits = np.full((1, 8), -10.0, np.float32)
+    logits[0, :3] = 2.0
+    from repro.heads.base import sample_from_logits
+    seen = set()
+    for i in range(64):
+        s = sample_from_logits(jax.random.key(i), jnp.asarray(logits),
+                               temperature=1.0, top_p=0.5)
+        seen.add(int(s[0]))
+    assert seen == {0, 1}, seen
 
 
 def test_screen_params_is_pytree():

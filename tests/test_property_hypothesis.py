@@ -14,6 +14,7 @@ from repro.core.knapsack import greedy_knapsack
 from repro.core.screening import (ScreenParams, assign_clusters,
                                   candidates_to_padded, screened_topk)
 from repro.core.evaluate import precision_at_k
+from repro.heads.sharded import simulate_sharded_topk
 from repro.launch.hlo_cost import _shape_elems_bytes
 from repro.layers.rope import apply_rope
 
@@ -81,6 +82,28 @@ def test_precision_bounds_and_identity(n, k, seed):
     mixed[:, 0] = 5000
     p = precision_at_k(mixed, exact)
     assert 0.0 <= p <= 1.0
+
+
+@given(st.integers(2, 64), st.integers(1, 9), st.integers(1, 16),
+       st.integers(0, 10_000), st.booleans())
+@settings(**SETTINGS)
+def test_sharded_topk_merge_equals_global(L, n_shards, k, seed, ties):
+    """The sharded heads' pipeline — per-shard local top-min(k, L_shard),
+    shard-offset id translation, shard-major gather, re-top-k — must equal a
+    single global ``jax.lax.top_k`` for ANY logits, shard count, and k ≤ L:
+    ids (including the lowest-index tie-break) and values bit-identical.
+    ``ties=True`` draws small-integer logits so duplicate values are dense."""
+    k = min(k, L)
+    rng = np.random.default_rng(seed)
+    if ties:
+        logits = rng.integers(-3, 4, (3, L)).astype(np.float32)
+    else:
+        logits = rng.standard_normal((3, L)).astype(np.float32)
+    logits = jnp.asarray(logits)
+    mids, mvals = simulate_sharded_topk(logits, n_shards, k)
+    gvals, gids = jax.lax.top_k(logits, k)
+    np.testing.assert_array_equal(np.asarray(mids), np.asarray(gids))
+    np.testing.assert_array_equal(np.asarray(mvals), np.asarray(gvals))
 
 
 @given(st.integers(1, 3), st.integers(2, 16), st.integers(1, 4),
