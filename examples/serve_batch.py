@@ -1,8 +1,10 @@
-"""Batched serving demo: the DecodeEngine serving concurrent requests through
-the exact and the L2S-screened head, reporting tokens/s and agreement.
+"""Mixed-traffic serving demo: one DecodeEngine, many ServeRequests, a
+RoutingPolicy deciding per request which softmax head decodes it.
 
-Run: PYTHONPATH=src python examples/serve_batch.py
+Run: PYTHONPATH=src python examples/serve_batch.py            # full demo
+     PYTHONPATH=src python examples/serve_batch.py --reduced  # CI smoke
 """
+import argparse
 import dataclasses
 import time
 
@@ -16,21 +18,30 @@ from repro.data import ZipfMarkovCorpus, make_lm_batches
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim import adamw_init
-from repro.serving import DecodeEngine
+from repro.serving import (CostAwarePolicy, DecodeEngine, ServeRequest,
+                           TierPolicy)
 
-VOCAB, BATCH, NEW = 3000, 16, 48
+ap = argparse.ArgumentParser()
+ap.add_argument("--reduced", action="store_true",
+                help="tiny model + short decode for CI smoke runs")
+args = ap.parse_args()
+
+if args.reduced:
+    VOCAB, D, STEPS, BATCH, NEW = 600, 64, 60, 8, 8
+else:
+    VOCAB, D, STEPS, BATCH, NEW = 3000, 128, 250, 16, 48
 
 cfg = dataclasses.replace(get_config("ptb-small-lstm"), vocab_size=VOCAB,
-                          d_model=128, dtype="float32")
+                          d_model=D, dtype="float32")
 model = build_model(cfg)
 params = model.init(jax.random.key(0), dtype=jnp.float32)
 corpus = ZipfMarkovCorpus(VOCAB, branching=64, seed=0)
-tcfg = TrainConfig(lr=2e-3, total_steps=250, warmup_steps=20,
+tcfg = TrainConfig(lr=2e-3, total_steps=STEPS, warmup_steps=20,
                    remat="none", loss_chunk=None)
 step_fn = jax.jit(make_train_step(model, tcfg))
 opt = adamw_init(params)
 print("training ...")
-for batch in make_lm_batches(corpus, 250, 16, 64, seed=1):
+for batch in make_lm_batches(corpus, STEPS, 16, 64, seed=1):
     params, opt, _ = step_fn(params, opt,
                              {k: jnp.asarray(v) for k, v in batch.items()})
 
@@ -39,31 +50,53 @@ H, y = collect_contexts(
     [jnp.asarray(b["tokens"]) for b in make_lm_batches(corpus, 30, 16, 64,
                                                        seed=9)],
     max_vectors=20_000)
-state = fit_l2s(H, y, VOCAB, L2SConfig(num_clusters=100, budget=150,
+state = fit_l2s(H, y, VOCAB, L2SConfig(num_clusters=100 if not args.reduced
+                                       else 16,
+                                       budget=150 if not args.reduced else 48,
                                        outer_iters=2, sgd_steps=150))
 engine = DecodeEngine(model, params, screen=state.screen,
                       max_len=16 + NEW)
 
-requests = corpus.sample_batch(BATCH, 16, seed=11)
-# warmup compiles — heads are resolved by name and switchable per request
-engine.generate(requests, 2, head="exact")
-engine.generate(requests, 2, head="screened")
+# -- mixed traffic: every request carries its own latency tier / accuracy
+#    floor, and the policy resolves each to a head. One engine, one batch.
+prompts = corpus.sample_batch(BATCH, 16, seed=11)
+requests = []
+for i, p in enumerate(prompts):
+    if i % 4 == 0:       # quality tier: caller demands exact decode
+        requests.append(ServeRequest(prompt=p, max_new=NEW,
+                                     latency_tier="batch",
+                                     accuracy_floor=1.0))
+    elif i % 4 == 1:     # explicit override: escape hatch past the policy
+        requests.append(ServeRequest(prompt=p, max_new=NEW, head="exact"))
+    else:                # latency tier: cheapest acceptable head
+        requests.append(ServeRequest(prompt=p, max_new=NEW,
+                                     latency_tier="realtime"))
 
+policy = CostAwarePolicy(["screened", "exact"])
+engine.serve_batch(requests, policy=policy)          # warmup compiles
 t0 = time.perf_counter()
-exact = engine.generate(requests, NEW, head="exact")
-t_exact = time.perf_counter() - t0
-t0 = time.perf_counter()
-fast = engine.generate(requests, NEW, head="screened")
-t_fast = time.perf_counter() - t0
+results = engine.serve_batch(requests, policy=policy)
+t_mixed = time.perf_counter() - t0
+by_head = {}
+for r in results:
+    by_head.setdefault(r.head, []).append(r)
+total_tokens = sum(len(r.tokens) for r in results)
+print(f"mixed batch : {total_tokens / t_mixed:8.0f} tok/s over "
+      f"{len(results)} requests -> "
+      + ", ".join(f"{k}×{len(v)}" for k, v in sorted(by_head.items())))
 
-agree = float((exact.tokens == fast.tokens).mean())
-print(f"exact softmax : {BATCH * NEW / t_exact:8.0f} tok/s")
-print(f"L2S screened  : {BATCH * NEW / t_fast:8.0f} tok/s "
-      f"({t_exact / t_fast:.2f}x, agreement {agree:.3f})")
+# routed results agree with solo exact decode on most tokens
+agree = np.mean([
+    (r.tokens == engine.generate(r.request.prompt[None], r.request.max_new,
+                                 head="exact").tokens[0]).mean()
+    for r in results])
+print(f"agreement vs exact: {agree:.3f}  "
+      f"(screened requests trade a little fidelity for speed)")
 
-# per-request routing: the same engine serves a quality-tier request on the
-# exact head and a latency-tier request on the screened head, no re-init
-hi = engine.generate(requests[:1], 8, head="exact")
-lo = engine.generate(requests[1:2], 8, head="screened")
-print(f"per-request routing: exact tier {hi.tokens[0][:6]}..., "
-      f"screened tier {lo.tokens[0][:6]}...")
+# same engine still answers tier-mapped traffic with zero new compiles
+tier_policy = TierPolicy({"realtime": "screened", "batch": "exact"},
+                         default="screened")
+res2 = engine.serve_batch(requests, policy=tier_policy)
+print(f"tier policy routes: "
+      + ", ".join(sorted({r.head for r in res2}))
+      + f"; cached steps: {engine._cache_size()}")

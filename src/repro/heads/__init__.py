@@ -26,8 +26,8 @@ New heads register with ``heads.register(name, factory)`` where the factory
 takes the construction context as kwargs (``W``, ``b``, ``screen``, ...) and
 tolerates extras — that single seam is how new approximation methods,
 kernels, and per-request policies plug into the engine and benchmarks."""
-from repro.heads.base import (NEG_INF, SoftmaxHead, sample_from_logits,
-                              screened_flops_per_query)
+from repro.heads.base import (NEG_INF, MissingScreenError, SoftmaxHead,
+                              sample_from_logits, screened_flops_per_query)
 from repro.heads.registry import get, names, register
 from repro.heads.exact import ExactHead
 from repro.heads.screened import ScreenedHead

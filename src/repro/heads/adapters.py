@@ -20,8 +20,8 @@ import numpy as np
 
 from repro.core.baselines import (AdaptiveShortlist, GreedyMIPS, LSHMIPS,
                                   PCAMIPS, SVDSoftmax)
-from repro.heads.base import (NEG_INF, SoftmaxHead, sample_from_logits,
-                              screened_flops_per_query)
+from repro.heads.base import (NEG_INF, SoftmaxHead, require_screen,
+                              sample_from_logits, screened_flops_per_query)
 
 
 class BaselineHead(SoftmaxHead):
@@ -98,9 +98,7 @@ class ScreenedNumpyHead(BaselineHead):
 
     def __init__(self, W, b, screen, **kw):
         from repro.core.evaluate import PerQueryScreen
-        assert screen is not None, (
-            "ScreenedNumpyHead needs a fitted ScreenParams — fit one with "
-            "fit_l2s(...) and pass screen= to heads.get")
+        require_screen(screen, "ScreenedNumpyHead")
         W = np.asarray(W)
         b = np.asarray(b)
         self.screen = screen

@@ -35,6 +35,24 @@ import numpy as np
 NEG_INF = -1e30
 
 
+class MissingScreenError(ValueError):
+    """A screening head was requested without a fitted ``ScreenParams``.
+
+    Raised by the screening head factories (screened, screened-sharded,
+    screened-pallas, screened-cpu) so callers — the serving launcher, the
+    router's catalog builder — can distinguish "this head needs an L2S
+    screen" from a programming error and surface the fix
+    (``fit_l2s(...)`` → pass ``screen=``) instead of a bare assertion."""
+
+
+def require_screen(screen, head_name: str):
+    if screen is None:
+        raise MissingScreenError(
+            f"{head_name} needs a fitted ScreenParams — fit one with "
+            f"fit_l2s(...) and pass screen= to the engine or heads.get")
+    return screen
+
+
 def screened_flops_per_query(screen, d: int) -> float:
     """Shared L2S cost model O((r + L̄)·d): routing plus the mean candidate
     matmul, with L̄ the uniform-over-clusters mean candidate words. One
@@ -51,6 +69,10 @@ class SoftmaxHead:
     name: str = "abstract"
     device_kind: str = "jax"
     is_jittable: bool = True
+    # every shipped head implements ``sample``; a future head that cannot
+    # (e.g. a pure-ranking retrieval index) sets False and routing policies
+    # keep sampled requests off it
+    supports_sampling: bool = True
     # vocab-sharded heads set this to their jax.sharding.Mesh in prepare();
     # the serving engine uses it to build mesh-aware jitted decode steps
     # (inputs replicated over the head's device set instead of device 0)
@@ -81,10 +103,67 @@ class SoftmaxHead:
         """Analytic MACs per query (paper's hardware-independent cost)."""
         return float("nan")
 
+    _MEMORY_ATTRS = ("W", "b", "_Wb", "_bb")
+
+    @property
+    def memory_bytes(self) -> int:
+        """Resident bytes of the head's serving tables: weights (plus the
+        MXU-packed copy when the head keeps one) and any screen structure.
+        Sharded heads override this with their device-resident shard tables.
+        For a sharded head the number is the TOTAL across shards; divide by
+        ``n_shards`` for the per-device footprint routing policies care
+        about."""
+        seen, total = set(), 0
+        for attr in self._MEMORY_ATTRS:
+            a = getattr(self, attr, None)
+            if a is not None and hasattr(a, "nbytes") and id(a) not in seen:
+                seen.add(id(a))
+                total += int(a.nbytes)
+        screen = getattr(self, "screen", None)
+        if screen is not None:
+            for leaf in jax.tree_util.tree_leaves(screen):
+                if hasattr(leaf, "nbytes") and id(leaf) not in seen:
+                    seen.add(id(leaf))
+                    total += int(leaf.nbytes)
+        return total
+
+    @property
+    def n_shards(self):
+        """Vocab shards this head spans (None when unsharded). Sharded heads
+        overwrite the attribute in ``prepare()``."""
+        return None if self.mesh is None else int(self.mesh.shape["model"])
+
+    def step_key(self) -> tuple:
+        """Stable identity for the serving engine's compiled-step cache.
+
+        Two prepared instances of the same head class over the same
+        underlying arrays hash equal, so a transient instance (rebuilt per
+        request) reuses — instead of evicting — the hot compiled step of its
+        registry-cached twin. Arrays are identified by ``id`` (jnp.asarray
+        is a no-copy on jnp inputs, so wrapping the same weights yields the
+        same ids); heads holding distinct arrays never collide. ``impl``
+        (the baseline adapters' configured method object) is part of the
+        identity because it carries behavior-defining knobs (rho, budget,
+        bands, ...) that the arrays alone don't."""
+        parts = [self.name, type(self)]
+        for attr in ("W", "b", "Wp", "bp", "_Wb", "_bb", "screen", "mesh",
+                     "interpret", "impl"):
+            v = getattr(self, attr, None)
+            if v is not None:
+                parts.append(v if isinstance(v, (str, int, float, bool))
+                             else id(v))
+        return tuple(parts)
+
     def describe(self) -> dict:
+        """Routing metadata: everything a ``RoutingPolicy`` may weigh — the
+        analytic cost model, device placement, memory footprint, and which
+        query kinds the head can serve."""
         return {"name": self.name, "device_kind": self.device_kind,
                 "is_jittable": self.is_jittable,
-                "flops_per_query": self.flops_per_query}
+                "supports_sampling": self.supports_sampling,
+                "flops_per_query": self.flops_per_query,
+                "memory_bytes": self.memory_bytes,
+                "n_shards": self.n_shards}
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (f"{type(self).__name__}(name={self.name!r}, "

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.screening import ScreenParams
-from repro.heads.base import (SoftmaxHead, sample_from_logits,
-                              screened_flops_per_query)
+from repro.heads.base import (SoftmaxHead, require_screen,
+                              sample_from_logits, screened_flops_per_query)
 from repro.kernels.screen import V_BLK
 
 
@@ -25,7 +25,8 @@ class ScreenedPallasHead(SoftmaxHead):
     name = "screened-pallas"
 
     def __init__(self, W, b, screen: ScreenParams, interpret: bool = True):
-        assert screen is not None and screen.block == V_BLK, (
+        require_screen(screen, "ScreenedPallasHead")
+        assert screen.block == V_BLK, (
             f"Pallas head needs a {V_BLK}-word block-candidate screen "
             f"(got block={getattr(screen, 'block', None)}); fit with "
             f"L2SConfig(vocab_block={V_BLK})")

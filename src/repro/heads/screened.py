@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.core.screening import (ScreenParams, assign_clusters,
                                   screened_logits, screened_topk)
-from repro.heads.base import (SoftmaxHead, sample_from_logits,
-                              screened_flops_per_query)
+from repro.heads.base import (SoftmaxHead, require_screen,
+                              sample_from_logits, screened_flops_per_query)
 
 
 @partial(jax.jit, static_argnames="k")
@@ -48,9 +48,7 @@ class ScreenedHead(SoftmaxHead):
     name = "screened"
 
     def __init__(self, W, b, screen: ScreenParams):
-        assert screen is not None, (
-            "ScreenedHead needs a fitted ScreenParams — fit one with "
-            "fit_l2s(...) and pass screen= to the engine or heads.get")
+        require_screen(screen, "ScreenedHead")
         self.W = jnp.asarray(W)
         self.b = jnp.asarray(b)
         self.screen = screen

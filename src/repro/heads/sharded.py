@@ -40,7 +40,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.screening import ScreenParams, assign_clusters
-from repro.heads.base import NEG_INF, SoftmaxHead, sample_from_logits
+from repro.heads.base import (NEG_INF, SoftmaxHead, require_screen,
+                              sample_from_logits)
 from repro.launch.mesh import make_test_mesh
 from repro.launch.sharding import head_shardings
 
@@ -195,7 +196,7 @@ class ExactShardedHead(SoftmaxHead):
         self.bp = jax.device_put(jnp.asarray(bp), sh["b"])
         self._W0 = self._b0 = None      # only the sharded copy stays resident
         self._repl = sh["replicated"]
-        self.mesh, self.n_shards, self.L = mesh, n, L
+        self.mesh, self.L = mesh, L
         self._fns = _exact_impl(mesh, L)
         return self
 
@@ -224,10 +225,13 @@ class ExactShardedHead(SoftmaxHead):
             (self._n_shards_arg or 1)
         return float(-(-L // n) * d)
 
-    def describe(self) -> dict:
-        d = super().describe()
-        d["n_shards"] = getattr(self, "n_shards", None)
-        return d
+    @property
+    def memory_bytes(self) -> int:
+        """Device-resident shard tables only (the host staging copy is
+        dropped at prepare()); total across shards."""
+        if self.mesh is None:
+            return int(self._W0.nbytes + self._b0.nbytes)
+        return int(self.Wp.nbytes + self.bp.nbytes)
 
 
 # -- screened-sharded --------------------------------------------------------
@@ -300,9 +304,7 @@ class ScreenedShardedHead(SoftmaxHead):
 
     def __init__(self, W, b, screen: ScreenParams, mesh=None,
                  n_shards: int = None):
-        assert screen is not None, (
-            "ScreenedShardedHead needs a fitted ScreenParams — fit one with "
-            "fit_l2s(...) and pass screen= to the engine or heads.get")
+        require_screen(screen, "ScreenedShardedHead")
         self._W0 = np.asarray(W, np.float32)
         self._b0 = np.asarray(b, np.float32)
         self._shape = self._W0.shape
@@ -353,7 +355,7 @@ class ScreenedShardedHead(SoftmaxHead):
         self.v = jax.device_put(jnp.asarray(self.screen.v), sh["replicated"])
         self._W0 = self._b0 = None      # only the sharded copy stays resident
         self._repl = sh["replicated"]
-        self.mesh, self.n_shards, self.L, self.c_shard_max = mesh, n, L, Cs
+        self.mesh, self.L, self.c_shard_max = mesh, L, Cs
         self._fns = _screened_impl(mesh, L)
         return self
 
@@ -391,7 +393,12 @@ class ScreenedShardedHead(SoftmaxHead):
             (self._n_shards_arg or 1)
         return float((self.screen.r + lbar / n) * d)
 
-    def describe(self) -> dict:
-        d = super().describe()
-        d["n_shards"] = getattr(self, "n_shards", None)
-        return d
+    @property
+    def memory_bytes(self) -> int:
+        """Device-resident shard tables (weights + per-shard candidate
+        slabs + replicated router), total across shards — NOT the retained
+        host screen, which would double-count the candidate structure."""
+        if self.mesh is None:
+            return int(self._W0.nbytes + self._b0.nbytes)
+        return int(self.Wp.nbytes + self.bp.nbytes +
+                   self.cand_local.nbytes + self.v.nbytes)

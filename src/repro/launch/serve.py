@@ -2,8 +2,13 @@
 
 ``python -m repro.launch.serve --arch ptb-small-lstm --reduced --l2s``
 trains a tiny LM on the synthetic corpus, fits the screen (Algorithm 1), and
-serves batched requests through both heads, reporting per-step softmax time
-and decode agreement.
+serves ``ServeRequest`` batches through both heads via
+``DecodeEngine.serve_batch`` + ``StaticPolicy``, reporting decode time and
+token agreement.
+
+A fast head that needs a screen (``--head screened`` without ``--l2s``)
+fails BEFORE training with exit code 2 and the fix-it message — the
+screening factories raise a typed ``MissingScreenError``.
 """
 from __future__ import annotations
 
@@ -14,13 +19,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import heads as heads_registry
 from repro.configs import L2SConfig, get_config
 from repro.core import collect_contexts, fit_l2s
 from repro.data import ZipfMarkovCorpus, make_lm_batches
+from repro.heads import MissingScreenError
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim import adamw_init
-from repro.serving import DecodeEngine
+from repro.serving import DecodeEngine, ServeRequest, StaticPolicy
 from repro.configs import TrainConfig
 
 
@@ -49,6 +56,25 @@ def main(argv=None):
     assert cfg.supports_decode, f"{cfg.name} is encoder-only"
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
+
+    # fail FAST on a screening head without --l2s: probe the factory with a
+    # tiny weight slice BEFORE spending time on training. Screening heads
+    # raise MissingScreenError from their constructor regardless of shapes;
+    # any other failure is inconclusive at probe scale (the head may just
+    # need the real tables) and is re-raised properly after training.
+    head_name = args.head if args.head is not None else \
+        ("screened" if args.l2s else None)
+    if head_name not in (None, "exact") and not args.l2s:
+        W0, b0 = model.softmax_weights(params)
+        try:
+            heads_registry.get(head_name, W=W0[:8], b=b0[:8], screen=None)
+        except MissingScreenError as e:
+            print(f"[serve] cannot build head {head_name!r}: {e} "
+                  f"(pass --l2s to fit one)")
+            return 2
+        except Exception:
+            pass
+
     corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=min(64, cfg.vocab_size // 4),
                               seed=args.seed)
 
@@ -79,28 +105,26 @@ def main(argv=None):
     engine = DecodeEngine(model, params, screen=screen,
                           max_len=args.prompt_len + args.max_new)
     prompts = corpus.sample_batch(args.requests, args.prompt_len, seed=42)
+    requests = [ServeRequest(prompt=p, max_new=args.max_new)
+                for p in prompts]
 
     t0 = time.time()
-    exact = engine.generate(prompts, args.max_new, head="exact")
+    exact = engine.serve_batch(requests, policy=StaticPolicy("exact"))
     t_exact = time.time() - t0
     print(f"[serve] exact decode: {args.requests}×{args.max_new} tokens "
           f"in {t_exact:.2f}s")
-    # fast pass: an explicit --head, or "screened" once --l2s fitted a screen
-    head_name = args.head if args.head is not None else \
-        ("screened" if screen is not None else None)
     if head_name is not None and head_name != "exact":
         try:
-            fast_head = engine.resolve_head(head_name)
-        except AssertionError as e:
-            # screening heads without a fitted screen name fit_l2s in their
-            # assertion — surface it with the fix instead of silently skipping
+            engine.resolve_head(head_name)
+        except MissingScreenError as e:       # safety net — probed above
             print(f"[serve] cannot build head {head_name!r}: {e} "
                   f"(pass --l2s to fit one)")
             return 2
         t0 = time.time()
-        fast = engine.generate(prompts, args.max_new, head=fast_head)
+        fast = engine.serve_batch(requests, policy=StaticPolicy(head_name))
         t_fast = time.time() - t0
-        agree = float((fast.tokens == exact.tokens).mean())
+        agree = float(np.mean([
+            (f.tokens == e.tokens).mean() for f, e in zip(fast, exact)]))
         print(f"[serve] {head_name} decode:  {t_fast:.2f}s  "
               f"token agreement {agree:.3f}")
     return 0

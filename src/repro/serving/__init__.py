@@ -1,8 +1,15 @@
 from repro.serving.engine import DecodeEngine, GenerationResult
+from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
+                                  RoutingPolicy, StaticPolicy, TierPolicy,
+                                  route_requests)
 # deprecated re-exports, kept for one deprecation cycle alongside
 # repro.serving.sampling — each call emits a DeprecationWarning and
 # delegates to the matching repro.heads backend
 from repro.serving.sampling import greedy_next, screened_greedy_next
 
 __all__ = ["DecodeEngine", "GenerationResult",
+           "ServeRequest", "ServeResult",
+           "RoutingPolicy", "StaticPolicy", "TierPolicy", "CostAwarePolicy",
+           "DEFAULT_ACCURACY", "route_requests",
            "greedy_next", "screened_greedy_next"]

@@ -21,11 +21,20 @@ shard_map share one device set — still one compilation per head.
 
 Beam search follows the paper's §4.2 protocol: log-softmax over the head's
 reduced candidate space, probability 0 (−inf log-prob) elsewhere.
+
+Request-centric serving: ``serve_batch(requests, policy=...)`` takes
+``ServeRequest``s (repro.serving.request), resolves each to a head name
+through a ``RoutingPolicy`` (repro.serving.router), groups requests by
+(resolved head, prompt length, sampling statics), pads each group to one
+batched decode over the SAME cached jitted steps ``generate`` uses — so a
+mixed batch causes zero new step compilations after warmup — and scatters
+``ServeResult``s back in request order.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +42,15 @@ import numpy as np
 
 from repro import heads as heads_registry
 from repro.core.screening import ScreenParams
-from repro.heads.base import SoftmaxHead
+from repro.heads.base import MissingScreenError, SoftmaxHead
 from repro.models.model import Model
+from repro.serving.request import ServeRequest, ServeResult
 
 HeadLike = Union[str, SoftmaxHead]
+
+# serve_batch sentinel: "route to the engine's default head instance" —
+# never a valid registry name, never resolved through the registry
+_ENGINE_DEFAULT = "__engine-default__"
 
 
 @dataclass
@@ -63,10 +77,13 @@ class DecodeEngine:
         self.W, self.b = W, b
         self._head_kwargs = dict(head_kwargs or {})
         self._head_cache: Dict[str, SoftmaxHead] = {}
-        # bounded: steps are cheap to rebuild but hold compiled executables;
-        # per-request temperatures / transient head instances must not
-        # accumulate cache entries forever (oldest-inserted evicted)
-        self._step_cache: Dict[tuple, callable] = {}
+        # bounded LRU: steps are cheap to rebuild but hold compiled
+        # executables; per-request temperatures must not accumulate entries
+        # forever. Keys use head.step_key() — a stable identity over the
+        # head's underlying arrays — so transient instances of the same
+        # prepared head hit (and refresh) the hot entry instead of filling
+        # the cache and evicting it. Least-recently-USED is evicted.
+        self._step_cache: "OrderedDict[tuple, callable]" = OrderedDict()
         self._step_cache_max = 32
         self._jit_prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache))
@@ -109,7 +126,7 @@ class DecodeEngine:
         return fn
 
     def _greedy_step(self, head: SoftmaxHead):
-        key = (head, "greedy")
+        key = (head.step_key(), "greedy")
         if key not in self._step_cache:
             if head.is_jittable:
                 def step(params, tok, cache, pos):
@@ -126,16 +143,38 @@ class DecodeEngine:
                                       jnp.int32)
                     return nxt, h, cache
             self._put_step(key, fn)
+        else:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
         return self._step_cache[key]
 
     def _put_step(self, key, fn):
         while len(self._step_cache) >= self._step_cache_max:
-            self._step_cache.pop(next(iter(self._step_cache)))
+            self._step_cache.popitem(last=False)    # least-recently-used
         self._step_cache[key] = fn
+
+    def _cache_size(self) -> int:
+        """Cached compiled steps — at most one per (head, step-kind)."""
+        return len(self._step_cache)
+
+    def compiled_step_counts(self) -> Dict[tuple, int]:
+        """{(head name, step kind): XLA executables held} across the step
+        cache — the recompile telemetry benchmarks/serve_mixed.py reports.
+        A count above 1 for one key means the same step was re-traced (e.g.
+        for a new batch shape), which is exactly what serve_batch's
+        group-and-pad exists to avoid."""
+        out: Dict[tuple, int] = {}
+        for (skey, kind, *_), fn in self._step_cache.items():
+            inner = getattr(fn, "_inner_jit", fn)
+            n = inner._cache_size() if hasattr(inner, "_cache_size") else 0
+            k = (skey[0], kind)
+            out[k] = out.get(k, 0) + n
+        return out
 
     def _sample_step(self, head: SoftmaxHead, temperature: float,
                      top_p: float):
-        key = (head, "sample", float(temperature), float(top_p))
+        key = (head.step_key(), "sample", float(temperature), float(top_p))
+        if key in self._step_cache:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
         if key not in self._step_cache:
             if head.is_jittable:
                 def step(params, rkey, tok, cache, pos):
@@ -198,6 +237,77 @@ class DecodeEngine:
             tok, _, cache = step(self.params, ki, tok, cache, Tp + i)
             out.append(np.asarray(tok))
         return GenerationResult(tokens=np.stack(out, axis=1), steps=max_new)
+
+    # -- request-centric serving ---------------------------------------------
+    def head_catalog(self, names: Sequence[str]) -> Dict[str, dict]:
+        """{name: head.describe()} for every resolvable name — the metadata
+        routing policies weigh. Names whose head cannot be built in THIS
+        engine — a screening head with no fitted screen, or a kernel head
+        whose screen has the wrong block size (those factories assert) —
+        are omitted, so a policy listing them simply never routes there;
+        unknown registry names still raise KeyError."""
+        catalog = {}
+        for name in dict.fromkeys(names):
+            try:
+                catalog[name] = self.resolve_head(name).describe()
+            except (MissingScreenError, AssertionError):
+                continue
+        return catalog
+
+    def serve_batch(self, requests: Sequence[ServeRequest],
+                    policy=None) -> List[ServeResult]:
+        """Serve a mixed batch of ``ServeRequest``s through routed heads.
+
+        Each request resolves to a head name — its explicit ``head`` field,
+        else ``policy.route`` over ``head_catalog(policy.candidates)``;
+        ``policy=None`` keeps everything on the engine's default head.
+        Requests sharing (head, prompt length, sampling statics) run as ONE
+        batched decode padded to the group's longest ``max_new`` through
+        the same cached jitted steps ``generate`` uses — a mixed batch adds
+        zero step compilations after warmup. Results come back in request
+        order; greedy results are bit-identical to solo ``generate`` calls
+        (see repro.serving.request for the sampling determinism
+        contract)."""
+        from repro.serving.router import StaticPolicy, route_requests
+        requests = list(requests)
+        if not requests:
+            return []
+        # policy=None serves through the engine's default head INSTANCE (a
+        # custom instance may not be re-resolvable by name); the sentinel
+        # groups those requests together and maps back to self.head below
+        if policy is None:
+            policy = StaticPolicy(_ENGINE_DEFAULT)
+        catalog = self.head_catalog(
+            tuple(n for n in getattr(policy, "candidates", ())
+                  if n != _ENGINE_DEFAULT))
+        names = route_requests(requests, policy, catalog)
+
+        groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for i, (req, name) in enumerate(zip(requests, names)):
+            groups.setdefault(req.group_key(name), []).append(i)
+
+        results: List[Optional[ServeResult]] = [None] * len(requests)
+        for key, idxs in groups.items():
+            name = key[0]
+            head = self.head if name == _ENGINE_DEFAULT else name
+            reqs = [requests[i] for i in idxs]
+            prompts = np.stack([r.prompt for r in reqs])
+            max_new = max(r.max_new for r in reqs)
+            proto = reqs[0]                  # sampling statics shared by key
+            if proto.sampled:
+                out = self.generate(prompts, max_new, head=head,
+                                    temperature=proto.temperature,
+                                    top_p=proto.top_p,
+                                    key=jax.random.key(proto.seed))
+            else:
+                out = self.generate(prompts, max_new, head=head)
+            served = getattr(self.head, "name", _ENGINE_DEFAULT) \
+                if name == _ENGINE_DEFAULT else name
+            for row, i in enumerate(idxs):
+                results[i] = ServeResult(
+                    tokens=out.tokens[row, :requests[i].max_new],
+                    head=served, request=requests[i], group_size=len(idxs))
+        return results
 
     # -- beam search (batch of 1 prompt, beam B_w) ---------------------------
     def beam_search(self, prompt: np.ndarray, beam: int, max_new: int,

@@ -215,7 +215,7 @@ def test_sharded_heads_decode_end_to_end(n_shards):
         assert hd.mesh is not None
         if n_shards is not None:
             assert hd.n_shards == n_shards
-        step = eng._step_cache[(hd, "greedy")]
+        step = eng._step_cache[(hd.step_key(), "greedy")]
         inner = getattr(step, "_inner_jit", step)
         if hasattr(inner, "_cache_size"):
             assert inner._cache_size() == 1, name
