@@ -43,11 +43,13 @@ register("exact-sharded",
          ExactShardedHead(W, b, mesh=mesh, n_shards=n_shards))
 register("screened", lambda W, b, screen, **_: ScreenedHead(W, b, screen))
 register("screened-sharded",
-         lambda W, b, screen, mesh=None, n_shards=None, **_:
-         ScreenedShardedHead(W, b, screen, mesh=mesh, n_shards=n_shards))
+         lambda W, b, screen, mesh=None, n_shards=None, local="jnp",
+         interpret=True, **_:
+         ScreenedShardedHead(W, b, screen, mesh=mesh, n_shards=n_shards,
+                             local=local, interpret=interpret))
 register("screened-pallas",
-         lambda W, b, screen, interpret=True, **_:
-         ScreenedPallasHead(W, b, screen, interpret=interpret))
+         lambda W, b, screen, interpret=True, fused=True, **_:
+         ScreenedPallasHead(W, b, screen, interpret=interpret, fused=fused))
 register("screened-cpu",
          lambda W, b, screen, **_: ScreenedNumpyHead(W, b, screen))
 register("svd", lambda W, b, rho=16, n_top=None, **_:

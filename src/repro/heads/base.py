@@ -19,6 +19,8 @@ Metadata drives engine behavior and benchmark reporting:
 
   flops_per_query — analytic multiply-accumulate count per query, the
                     hardware-independent speedup column of paper Table 1
+  bytes_per_query — estimated decode-step HBM traffic; separates the
+                    equal-flops fused/unfused kernel paths for routing
   device_kind     — "jax" or "numpy" (numpy heads run per-query on host,
                     the paper's single-thread CPU timing protocol)
   is_jittable     — True iff the head's methods are jnp-traceable, so the
@@ -61,6 +63,19 @@ def screened_flops_per_query(screen, d: int) -> float:
     return float((screen.r + lbar) * d)
 
 
+def screened_bytes_per_query(screen, d: int, writeback_floats: float = 0.0,
+                             itemsize: int = 4) -> float:
+    """Shared L2S HBM-traffic model for one decode step: the router and the
+    mean candidate weight tiles stream HBM→VMEM once, O((r + L̄)·d), plus
+    ``writeback_floats`` intermediate values written back and re-read
+    (counted twice). The fused Pallas path's whole point is driving the
+    writeback term from O(K·V_BLK) candidate logits down to O(k) results —
+    this is the number ``CostAwarePolicy`` compares across screened
+    backends."""
+    lbar = float(np.mean(np.asarray(screen.cand_len))) * screen.block
+    return float(((screen.r + lbar) * d + 2.0 * writeback_floats) * itemsize)
+
+
 class SoftmaxHead:
     """Base class / protocol for decode heads. Subclasses must implement
     ``topk`` and ``topk_logprobs``; ``next`` and ``sample`` have generic
@@ -101,6 +116,18 @@ class SoftmaxHead:
     @property
     def flops_per_query(self) -> float:
         """Analytic MACs per query (paper's hardware-independent cost)."""
+        return float("nan")
+
+    @property
+    def bytes_per_query(self) -> float:
+        """Estimated HBM bytes one decode-step query moves: weights/tables
+        streamed on-chip plus intermediates written back and re-read.
+        Distinguishes memory profiles the FLOP count can't — e.g. the fused
+        Pallas head does the same MACs as the unfused one but never writes
+        the (B, K·V_BLK) candidate-logit tile to HBM. Per-shard for sharded
+        heads (mirroring ``flops_per_query``); NaN when unmodeled. Routing
+        policies use it as the memory-profile tie-break between heads with
+        equal flops."""
         return float("nan")
 
     _MEMORY_ATTRS = ("W", "b", "_Wb", "_bb")
@@ -147,7 +174,7 @@ class SoftmaxHead:
         bands, ...) that the arrays alone don't."""
         parts = [self.name, type(self)]
         for attr in ("W", "b", "Wp", "bp", "_Wb", "_bb", "screen", "mesh",
-                     "interpret", "impl"):
+                     "interpret", "impl", "fused", "local"):
             v = getattr(self, attr, None)
             if v is not None:
                 parts.append(v if isinstance(v, (str, int, float, bool))
@@ -162,6 +189,7 @@ class SoftmaxHead:
                 "is_jittable": self.is_jittable,
                 "supports_sampling": self.supports_sampling,
                 "flops_per_query": self.flops_per_query,
+                "bytes_per_query": self.bytes_per_query,
                 "memory_bytes": self.memory_bytes,
                 "n_shards": self.n_shards}
 

@@ -59,3 +59,11 @@ class ExactHead(SoftmaxHead):
     def flops_per_query(self) -> float:
         L, d = self.W.shape
         return float(L * d)
+
+    @property
+    def bytes_per_query(self) -> float:
+        """Streams the full (L, d) weight matrix and writes back the L-wide
+        logit row for top-k — the memory wall the screened heads exist to
+        break."""
+        L, d = self.W.shape
+        return float((L * d + 2 * L) * self.W.dtype.itemsize)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.core.screening import (ScreenParams, assign_clusters,
                                   screened_logits, screened_topk)
 from repro.heads.base import (SoftmaxHead, require_screen,
-                              sample_from_logits, screened_flops_per_query)
+                              sample_from_logits, screened_bytes_per_query,
+                              screened_flops_per_query)
 
 
 @partial(jax.jit, static_argnames="k")
@@ -75,3 +76,12 @@ class ScreenedHead(SoftmaxHead):
     @property
     def flops_per_query(self) -> float:
         return screened_flops_per_query(self.screen, self.W.shape[1])
+
+    @property
+    def bytes_per_query(self) -> float:
+        """XLA materializes the (C_max·block) candidate-logit row between
+        the gather-matmul and the top-k — the writeback the fused Pallas
+        head eliminates."""
+        return screened_bytes_per_query(
+            self.screen, self.W.shape[1],
+            writeback_floats=float(self.screen.c_max * self.screen.block))

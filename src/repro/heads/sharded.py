@@ -42,6 +42,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.screening import ScreenParams, assign_clusters
 from repro.heads.base import (NEG_INF, SoftmaxHead, require_screen,
                               sample_from_logits)
+from repro.kernels.fused_topk import fused_screened_topk
+from repro.kernels.screen import V_BLK
 from repro.launch.mesh import make_test_mesh
 from repro.launch.sharding import head_shardings
 
@@ -114,6 +116,15 @@ def _local_topk_gather(logits, gids, k: int, L: int):
     vals = jax.lax.all_gather(vals, "model", axis=1, tiled=True)
     ids = jax.lax.all_gather(ids, "model", axis=1, tiled=True)
     return merge_shard_topk(vals, ids, k, sentinel=L)
+
+
+def _combine_shard_logz(lz):
+    """(B,) per-shard candidate logZ → global log Σ_s exp(lz_s), −inf-safe:
+    a shard with no candidates reports −∞ and contributes nothing; ALL
+    shards empty yields −∞ (probability 0), never NaN."""
+    m = jax.lax.pmax(lz, "model")
+    sub = jnp.where(jnp.isfinite(m), lz - m, -jnp.inf)
+    return m + jnp.log(jax.lax.psum(jnp.exp(sub), "model"))
 
 
 # -- exact-sharded -----------------------------------------------------------
@@ -226,6 +237,16 @@ class ExactShardedHead(SoftmaxHead):
         return float(-(-L // n) * d)
 
     @property
+    def bytes_per_query(self) -> float:
+        """PER-SHARD HBM bytes: this shard's L/n weight rows streamed once
+        plus its local logit row written back for the local top-k."""
+        L, d = self._shape
+        n = self.mesh.shape["model"] if self.mesh is not None else \
+            (self._n_shards_arg or 1)
+        Ls = -(-L // n)
+        return float((Ls * d + 2 * Ls) * 4)
+
+    @property
     def memory_bytes(self) -> int:
         """Device-resident shard tables only (the host staging copy is
         dropped at prepare()); total across shards."""
@@ -265,10 +286,14 @@ def _screened_impl(mesh, L: int):
     def topk_logprobs_body(W, b, v, cand, h, k):
         logits, gids = local_candidate_logits(W, b, v, cand, h)
         # log-softmax over the cluster's ENTIRE candidate set (paper §4.2),
-        # assembled from per-shard pieces
+        # assembled from per-shard pieces; an all-empty candidate union is
+        # probability 0 (NEG_INF), matching the local="pallas" path's
+        # −inf-safe contract so the backend knob never changes semantics
         z = _global_lse(logits)
         mids, mvals = _local_topk_gather(logits, gids, k, L)
-        return mids, mvals - z[:, None]
+        lp = jnp.where((z <= NEG_INF / 2)[:, None], NEG_INF,
+                       mvals - z[:, None])
+        return mids, lp
 
     def gather_body(W, b, v, cand, h):
         logits, gids = local_candidate_logits(W, b, v, cand, h)
@@ -296,19 +321,98 @@ def _screened_impl(mesh, L: int):
                            candidate_logits=candidate_logits)
 
 
+@lru_cache(maxsize=None)
+def _screened_pallas_impl(mesh, L: int, Ls: int, interpret: bool):
+    """Jitted shard_map closures for the FUSED-Pallas local candidate path
+    (``local="pallas"``): each shard reshapes its (Ls, d) weight rows into
+    MXU tiles — zero-copy, Ls is a V_BLK multiple by construction — and
+    runs the fused in-VMEM subset-softmax kernel over exactly the candidate
+    BLOCKS it owns, so the shard-local §4.2 reduction (sentinel masking,
+    top-k, log-sum-exp) happens on-chip and only (B, k) + (B,) cross the
+    collective. The merge is the same shard-major all-gather → re-top-k as
+    the word path, so ids keep the global lowest-index tie convention."""
+    wspec, bspec = P("model", None), P("model")
+    cspec, rspec = P("model", None, None), P(None, None)
+    nb = Ls // V_BLK
+
+    def local_fused(W, b, v, candb, h, k):
+        """(per-shard) fused kernel over the local block slab → shard-local
+        top-k (global word ids) + shard-local candidate logZ."""
+        d = W.shape[1]
+        cluster = assign_clusters(v, h)                  # (B,) replicated
+        block_ids = candb[0][cluster]                    # (B, Kb) local blocks
+        kk = min(k, block_ids.shape[-1] * V_BLK)
+        lids, vals, logz = fused_screened_topk(
+            W.reshape(nb, V_BLK, d), b.reshape(nb, V_BLK), h, block_ids,
+            k=kk, interpret=interpret)
+        offset = jax.lax.axis_index("model") * Ls
+        gids = jnp.where(lids < Ls, lids + offset, L)    # kernel sentinel = Ls
+        return vals, gids, logz
+
+    def gather_merge(vals, gids, k):
+        vals = jax.lax.all_gather(vals, "model", axis=1, tiled=True)
+        gids = jax.lax.all_gather(gids, "model", axis=1, tiled=True)
+        return merge_shard_topk(vals, gids, k, sentinel=L)
+
+    def topk_body(W, b, v, candb, h, k):
+        vals, gids, _ = local_fused(W, b, v, candb, h, k)
+        return gather_merge(vals, gids, k)
+
+    def topk_logprobs_body(W, b, v, candb, h, k):
+        vals, gids, logz = local_fused(W, b, v, candb, h, k)
+        z = _combine_shard_logz(logz)
+        mids, mvals = gather_merge(vals, gids, k)
+        lp = jnp.where(jnp.isfinite(z)[:, None], mvals - z[:, None], NEG_INF)
+        return mids, lp
+
+    def smap(body):
+        return shard_map(body, mesh=mesh,
+                         in_specs=(wspec, bspec, rspec, cspec, rspec),
+                         out_specs=(rspec, rspec), check_rep=False)
+
+    @partial(jax.jit, static_argnames="k")
+    def topk(W, b, v, candb, h, k):
+        return smap(partial(topk_body, k=k))(W, b, v, candb, h)
+
+    @partial(jax.jit, static_argnames="k")
+    def topk_logprobs(W, b, v, candb, h, k):
+        return smap(partial(topk_logprobs_body, k=k))(W, b, v, candb, h)
+
+    return SimpleNamespace(topk=topk, topk_logprobs=topk_logprobs)
+
+
 class ScreenedShardedHead(SoftmaxHead):
     """L2S screening with vocab-partitioned weights AND candidate tables:
     cluster candidates live on the shard owning their vocab range, so each
-    shard's gather-matmul touches only local rows."""
+    shard's gather-matmul touches only local rows.
+
+    ``local`` selects the shard-local scoring backend:
+      "jnp"     (default) word-granular gather-einsum + local top-k
+      "pallas"  the fused in-VMEM subset-softmax kernel over the candidate
+                BLOCKS each shard owns (requires a block == V_BLK screen;
+                shards pad their vocab range up to a V_BLK multiple so
+                global blocks never straddle shards). topk/topk_logprobs
+                reduce on-chip per shard; sampling keeps the word-granular
+                gather path (it needs the full local distribution)."""
     name = "screened-sharded"
 
     def __init__(self, W, b, screen: ScreenParams, mesh=None,
-                 n_shards: int = None):
+                 n_shards: int = None, local: str = "jnp",
+                 interpret: bool = True):
         require_screen(screen, "ScreenedShardedHead")
+        if local not in ("jnp", "pallas"):
+            raise ValueError(f"local must be 'jnp' or 'pallas', got {local!r}")
+        if local == "pallas":
+            assert screen.block == V_BLK, (
+                f"local='pallas' needs a {V_BLK}-word block-candidate screen "
+                f"(got block={getattr(screen, 'block', None)}); fit with "
+                f"L2SConfig(vocab_block={V_BLK})")
         self._W0 = np.asarray(W, np.float32)
         self._b0 = np.asarray(b, np.float32)
         self._shape = self._W0.shape
         self.screen = screen
+        self.local = local
+        self.interpret = interpret
         self._mesh_arg, self._n_shards_arg = mesh, n_shards
         self.mesh = None
 
@@ -320,6 +424,11 @@ class ScreenedShardedHead(SoftmaxHead):
         n = mesh.shape["model"]
         L, d = self._shape
         Ls = -(-L // n)
+        if self.local == "pallas":
+            # shard width up to a V_BLK multiple: global candidate blocks
+            # then land wholly on one shard and the per-shard (Ls, d) rows
+            # reshape zero-copy into (Ls/V_BLK, V_BLK, d) MXU tiles
+            Ls = -(-Ls // V_BLK) * V_BLK
         pad = n * Ls - L
         Wp = np.pad(self._W0, ((0, pad), (0, 0)))
         bp = np.pad(self._b0, (0, pad), constant_values=NEG_INF)
@@ -355,19 +464,47 @@ class ScreenedShardedHead(SoftmaxHead):
         self.v = jax.device_put(jnp.asarray(self.screen.v), sh["replicated"])
         self._W0 = self._b0 = None      # only the sharded copy stays resident
         self._repl = sh["replicated"]
-        self.mesh, self.L, self.c_shard_max = mesh, L, Cs
+        self.mesh, self.L, self.Ls, self.c_shard_max = mesh, L, Ls, Cs
         self._fns = _screened_impl(mesh, L)
+
+        if self.local == "pallas":
+            # per-shard candidate BLOCK slabs: cand_idx already holds global
+            # block ids (block == V_BLK) and Ls % V_BLK == 0, so block g
+            # belongs wholly to shard g // (Ls/V_BLK); store LOCAL block
+            # ids ascending (preserves the global tie order through the
+            # shard-major merge), sentinel nbs past the end
+            nbs = Ls // V_BLK
+            blocks_per_cluster = [np.sort(cand[t, :lens[t]].astype(np.int64))
+                                  for t in range(r)]
+            kb = max(1, max((int(((g >= s * nbs) & (g < (s + 1) * nbs)).sum())
+                             for g in blocks_per_cluster
+                             for s in range(n)), default=1))
+            btab = np.full((n, r, kb), nbs, np.int32)
+            for s in range(n):
+                for t, g in enumerate(blocks_per_cluster):
+                    loc = g[(g >= s * nbs) & (g < (s + 1) * nbs)] - s * nbs
+                    btab[s, t, :len(loc)] = loc
+            self.cand_blocks = jax.device_put(jnp.asarray(btab), sh["cand"])
+            self.kb_shard_max = kb
+            self._pallas_fns = _screened_pallas_impl(mesh, L, Ls,
+                                                     self.interpret)
         return self
 
     def topk(self, h, k: int):
         self.prepare()
         h = _resharded(jnp.asarray(h), self._repl)
+        if self.local == "pallas":
+            return self._pallas_fns.topk(self.Wp, self.bp, self.v,
+                                         self.cand_blocks, h, k=k)
         return self._fns.topk(self.Wp, self.bp, self.v, self.cand_local, h,
                               k=k)
 
     def topk_logprobs(self, h, k: int):
         self.prepare()
         h = _resharded(jnp.asarray(h), self._repl)
+        if self.local == "pallas":
+            return self._pallas_fns.topk_logprobs(self.Wp, self.bp, self.v,
+                                                  self.cand_blocks, h, k=k)
         return self._fns.topk_logprobs(self.Wp, self.bp, self.v,
                                        self.cand_local, h, k=k)
 
@@ -394,11 +531,32 @@ class ScreenedShardedHead(SoftmaxHead):
         return float((self.screen.r + lbar / n) * d)
 
     @property
+    def bytes_per_query(self) -> float:
+        """PER-SHARD HBM bytes (mirrors ``flops_per_query``): the replicated
+        router plus this shard's 1/n slice of the mean candidate tiles,
+        plus the local writeback — the (Cs) candidate-logit slab for the
+        jnp path, only the O(V_BLK) fused-kernel results for ``pallas``."""
+        d = self._shape[1]
+        lbar = float(np.mean(np.asarray(self.screen.cand_len))) * \
+            self.screen.block
+        n = self.mesh.shape["model"] if self.mesh is not None else \
+            (self._n_shards_arg or 1)
+        if self.local == "pallas":
+            writeback = float(V_BLK)
+        else:
+            writeback = float(getattr(self, "c_shard_max",
+                                      self.screen.c_max * self.screen.block))
+        return float(((self.screen.r + lbar / n) * d + 2 * writeback) * 4)
+
+    @property
     def memory_bytes(self) -> int:
         """Device-resident shard tables (weights + per-shard candidate
         slabs + replicated router), total across shards — NOT the retained
         host screen, which would double-count the candidate structure."""
         if self.mesh is None:
             return int(self._W0.nbytes + self._b0.nbytes)
-        return int(self.Wp.nbytes + self.bp.nbytes +
-                   self.cand_local.nbytes + self.v.nbytes)
+        total = int(self.Wp.nbytes + self.bp.nbytes +
+                    self.cand_local.nbytes + self.v.nbytes)
+        if self.local == "pallas":
+            total += int(self.cand_blocks.nbytes)
+        return total

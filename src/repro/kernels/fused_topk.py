@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: fused subset softmax + top-k over screened candidates.
+
+The full-fusion form of the L2S decode hot path (ROADMAP "On-TPU top-k /
+fused subset softmax"): where ``screened_logits_pallas`` writes the whole
+(B, K·V_BLK) candidate-logit tile back to HBM and leaves sentinel masking /
+``jax.lax.top_k`` / the §4.2 log-softmax to separate XLA ops, this kernel
+reduces each query row's candidates ON-CHIP and emits only
+
+  top-k word ids (B, k) · top-k raw logits (B, k) · log Z (B,)
+
+so per-query HBM traffic drops from O(K·V_BLK) floats to O(k) — the
+device-resident reduction trick of FGD (Zhang et al., 2018) and adaptive
+softmax (Grave et al., 2017), applied to the paper's screened candidate
+sets.
+
+Grid: (B, K) with the candidate slot j as the INNER, sequential dimension.
+TPU grids iterate row-major, so for a fixed row i the K slot programs run
+back-to-back and VMEM scratch carries state across them:
+
+  vals/ids scratch (1, k_pad)  running top-k, sorted descending, ties at
+                               the earliest flattened position (slot-major,
+                               lane-minor) — exactly ``jax.lax.top_k``'s
+                               convention over the unfused (B, K·V_BLK) row,
+                               so ids AND vals are bit-identical to the
+                               unfused path
+  lse scratch      (2,) SMEM   running (max, sum-exp) for the §4.2 log-Z,
+                               online-softmax style
+
+Each slot program DMAs its (V_BLK, d) weight tile (scalar-prefetch gather,
+same as kernels/screen.py), computes the V_BLK tile logits on the MXU,
+masks sentinel slots to −inf IN-KERNEL (``@pl.when`` guards the LSE update
+so empty slots contribute nothing), reconstructs word ids from
+``block_id · V_BLK + lane``, merges into the running top-k, and emits on
+the last slot. The running accumulators are initialized to (−∞, sentinel)
+so a row with fewer than k real candidates pads with NEG_INF/sentinel —
+matching the unfused sentinel convention bit-for-bit — and an all-sentinel
+row yields logZ = −∞ (callers map it to "probability 0", never NaN).
+
+Sampling rides the same reduction: with ``noise`` (temperature-scaled
+Gumbel, (B, K, V_BLK)) the perturbed top-1 IS a categorical draw over the
+candidate softmax (the Gumbel-max trick), so sampling also never
+materializes the logit tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+from repro.kernels.screen import V_BLK
+
+
+def _merge_topk(vals, ids, k: int):
+    """Top-k of a (1, C) pool by (value desc, position asc).
+
+    Selection by iterated first-position argmax reproduces
+    ``jax.lax.top_k``'s lowest-index tie-break as long as the pool is laid
+    out in flattened-position order — which the caller guarantees by
+    concatenating [running list (earlier positions), new tile (lane
+    order)]. Returns ((1, k) vals, (1, k) ids)."""
+    C = vals.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    out_v, out_i = [], []
+    for _ in range(k):
+        m = jnp.max(vals, axis=-1, keepdims=True)               # (1, 1)
+        first = jnp.min(jnp.where(vals == m, pos, C), axis=-1,
+                        keepdims=True)                          # first max
+        take = pos == first
+        out_v.append(m)
+        out_i.append(jnp.sum(jnp.where(take, ids, 0), axis=-1,
+                             keepdims=True))
+        vals = jnp.where(take, -jnp.inf, vals)
+    return jnp.concatenate(out_v, -1), jnp.concatenate(out_i, -1)
+
+
+def _fused_topk_kernel(ids_ref, w_ref, h_ref, b_ref, *rest,
+                       k: int, k_pad: int, n_blk: int, v_blk: int,
+                       with_noise: bool):
+    if with_noise:
+        (noise_ref, vals_out, ids_out, logz_out,
+         vals_scr, ids_scr, lse_scr) = rest
+    else:
+        noise_ref = None
+        vals_out, ids_out, logz_out, vals_scr, ids_scr, lse_scr = rest
+    i, j = pl.program_id(0), pl.program_id(1)
+    sentinel = n_blk * v_blk
+
+    @pl.when(j == 0)
+    def _init():
+        vals_scr[...] = jnp.full((1, k_pad), -jnp.inf, jnp.float32)
+        ids_scr[...] = jnp.full((1, k_pad), sentinel, jnp.int32)
+        lse_scr[0] = -jnp.inf
+        lse_scr[1] = 0.0
+
+    blk = ids_ref[i, j]
+    valid = blk < n_blk
+    acc = jax.lax.dot_general(
+        w_ref[0], h_ref[0][:, None],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                                                     # (V_BLK,)
+    tile = (acc + b_ref[0].astype(jnp.float32))[None, :]        # (1, V_BLK)
+    tile = jnp.where(valid, tile, NEG_INF)
+    lane = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    tile_ids = jnp.where(valid, blk * v_blk + lane, sentinel)
+
+    # §4.2 logZ: online (max, sum-exp); sentinel slots contribute nothing.
+    # Padded vocab rows carry exactly NEG_INF bias, so exp underflows to 0.
+    @pl.when(valid)
+    def _lse():
+        m_old, s_old = lse_scr[0], lse_scr[1]
+        m_new = jnp.maximum(m_old, jnp.max(tile))
+        lse_scr[0] = m_new
+        lse_scr[1] = (s_old * jnp.exp(m_old - m_new) +
+                      jnp.sum(jnp.exp(tile - m_new)))
+
+    if with_noise:
+        # Gumbel-max sampling: perturb AFTER the LSE so logZ stays exact;
+        # sentinel slots keep NEG_INF (never drawn vs any real candidate)
+        tile = jnp.where(valid, tile + noise_ref[0, 0][None, :], NEG_INF)
+
+    # running top-k merge: scratch first (earlier flattened positions win
+    # ties), tile second — scratch lanes past k hold −inf and never win
+    pool_v = jnp.concatenate([vals_scr[...], tile], axis=-1)
+    pool_i = jnp.concatenate([ids_scr[...], tile_ids], axis=-1)
+    new_v, new_i = _merge_topk(pool_v, pool_i, k)
+    vals_scr[0, :k] = new_v[0]
+    ids_scr[0, :k] = new_i[0]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        vals_out[0, :] = vals_scr[0, :k]
+        ids_out[0, :] = ids_scr[0, :k]
+        logz_out[0, 0] = lse_scr[0] + jnp.log(lse_scr[1])
+
+
+def fused_screened_topk(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
+                        h: jnp.ndarray, block_ids: jnp.ndarray, k: int,
+                        noise: Optional[jnp.ndarray] = None,
+                        interpret: bool = True
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """In-VMEM screened softmax reduction (plain/traceable; jitted entry
+    points live in kernels/ops.py).
+
+    W_blocks (n_blk, V_BLK, d); b_blocks (n_blk, V_BLK); h (B, d);
+    block_ids (B, K) int32, sentinel ≥ n_blk; optional noise (B, K, V_BLK)
+    added to valid candidate logits (Gumbel-max sampling).
+    → (ids (B, k) int32, vals (B, k) f32, logZ (B,) f32). ids/vals are
+    bit-identical to sentinel-masking + ``jax.lax.top_k`` over the unfused
+    (B, K·V_BLK) candidate row; logZ is −∞ (not NaN) for all-sentinel rows.
+    """
+    n_blk, v_blk, d = W_blocks.shape
+    B, K = block_ids.shape
+    k_pad = -(-k // v_blk) * v_blk
+    block_ids = block_ids.astype(jnp.int32)
+
+    def w_idx(i, j, ids):
+        return (jnp.where(ids[i, j] < n_blk, ids[i, j], 0), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, v_blk, d), w_idx),                 # gathered W tile
+        pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),     # h row
+        pl.BlockSpec((1, v_blk),                            # bias tile
+                     lambda i, j, ids: (jnp.where(ids[i, j] < n_blk,
+                                                  ids[i, j], 0), 0)),
+    ]
+    inputs = [block_ids, W_blocks, h, b_blocks]
+    if noise is not None:
+        in_specs.append(pl.BlockSpec((1, 1, v_blk),
+                                     lambda i, j, ids: (i, j, 0)))
+        inputs.append(noise.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, ids: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, ids: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, ids: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k_pad), jnp.float32),
+            pltpu.VMEM((1, k_pad), jnp.int32),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    vals, ids, logz = pl.pallas_call(
+        functools.partial(_fused_topk_kernel, k=k, k_pad=k_pad, n_blk=n_blk,
+                          v_blk=v_blk, with_noise=noise is not None),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return ids, vals, logz[:, 0]

@@ -33,10 +33,12 @@ def _route_kernel(h_ref, vt_ref, out_ref, *, r_true: int):
     out_ref[...] = jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cluster_route_pallas(h: jnp.ndarray, v: jnp.ndarray,
-                         interpret: bool = True) -> jnp.ndarray:
-    """h (B, d); v (r, d) → (B,) int32 cluster ids."""
+def cluster_route(h: jnp.ndarray, v: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """h (B, d); v (r, d) → (B,) int32 cluster ids.
+
+    Plain/traceable — compose inside an outer jit (kernels/ops.py does);
+    ``cluster_route_pallas`` is the jitted public entry point."""
     B, d = h.shape
     r = v.shape[0]
     r_pad = -(-r // LANE) * LANE
@@ -56,3 +58,6 @@ def cluster_route_pallas(h: jnp.ndarray, v: jnp.ndarray,
         interpret=interpret,
     )(hp, vt)
     return out[:B]
+
+
+cluster_route_pallas = jax.jit(cluster_route, static_argnames=("interpret",))

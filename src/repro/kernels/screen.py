@@ -19,8 +19,6 @@ masked to −inf in the wrapper (ops.py) — the kernel itself stays branch-free
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -41,13 +39,15 @@ def _screened_logits_kernel(block_ids_ref, w_ref, h_ref, b_ref, out_ref):
     out_ref[0, 0, :] = acc + b_ref[0].astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def screened_logits_pallas(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
-                           h: jnp.ndarray, block_ids: jnp.ndarray,
-                           interpret: bool = True) -> jnp.ndarray:
+def screened_logits(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
+                    h: jnp.ndarray, block_ids: jnp.ndarray,
+                    interpret: bool = True) -> jnp.ndarray:
     """W_blocks (n_blk, V_BLK, d); b_blocks (n_blk, V_BLK); h (B, d);
     block_ids (B, K) int32 (sentinel ≥ n_blk). → raw logits (B, K, V_BLK) f32
-    (sentinel tiles NOT yet masked — ops.py applies the −inf mask)."""
+    (sentinel tiles NOT yet masked — ops.py applies the −inf mask).
+
+    Plain/traceable — compose inside an outer jit (kernels/ops.py does);
+    ``screened_logits_pallas`` is the jitted public entry point."""
     n_blk, v_blk, d = W_blocks.shape
     B, K = block_ids.shape
     safe_ids = jnp.where(block_ids < n_blk, block_ids, 0).astype(jnp.int32)
@@ -71,3 +71,7 @@ def screened_logits_pallas(W_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((B, K, v_blk), jnp.float32),
         interpret=interpret,
     )(safe_ids, W_blocks, h, b_blocks)
+
+
+screened_logits_pallas = jax.jit(screened_logits,
+                                 static_argnames=("interpret",))

@@ -317,6 +317,37 @@ _NO_FLOP_OPS = _NO_BYTES_OPS | {
 }
 
 
+def materializes_f32_buffer(text: str, *dims: int) -> bool:
+    """True iff the HLO module contains an f32 buffer of exactly ``dims``
+    or its trailing-pair-flattened reshape (``f32[B, K·V]`` for (B, K, V))
+    — the two layouts the unfused candidate-logit tile actually takes in
+    compiled modules. Deliberately NOT broader: merging the LEADING pair
+    (``f32[B·K, V]``) collides with unrelated buffers (e.g. a (V_BLK, d)
+    weight tile whenever B·K == V_BLK), and any purely shape-based probe
+    trades some false positives/negatives for simplicity. The one place
+    the fused-kernel memory contract ("the (B, K·V_BLK) candidate-logit
+    tile must not exist") is spelled, shared by tests/test_hlo_cost.py and
+    benchmarks/kernel_fused.py."""
+    forms = [dims]
+    if len(dims) >= 2:
+        forms.append(dims[:-2] + (dims[-2] * dims[-1],))
+    shapes = {",".join(str(d) for d in f) for f in forms}
+    return any(re.search(rf"f32\[{re.escape(s)}[\]\}}]", text)
+               for s in shapes)
+
+
+def xla_bytes_accessed(compiled) -> float:
+    """Total "bytes accessed" from a ``jax.stages.Compiled``'s own
+    cost_analysis (which may return a list per partition). Counts each
+    while body ONCE — the right convention for interpret-mode Pallas
+    modules, where the grid loop's per-step traffic is VMEM-resident on
+    real hardware (``analyze_hlo`` would trip-multiply it)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca["bytes accessed"])
+
+
 def analyze_hlo(text: str) -> HloCost:
     comps, tables, entry = _parse_computations(text)
     if entry is None:

@@ -64,6 +64,12 @@ def main(argv=None):
     # need the real tables) and is re-raised properly after training.
     head_name = args.head if args.head is not None else \
         ("screened" if args.l2s else None)
+    # an unknown head name is conclusive NOW (the registry is static) — a
+    # typo must not cost a full training run before the KeyError surfaces
+    if head_name is not None and head_name not in heads_registry.names():
+        print(f"[serve] unknown head {head_name!r}; registered: "
+              f"{heads_registry.names()}")
+        return 2
     if head_name not in (None, "exact") and not args.l2s:
         W0, b0 = model.softmax_weights(params)
         try:

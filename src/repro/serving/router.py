@@ -102,9 +102,11 @@ class CostAwarePolicy(RoutingPolicy):
 
     Among eligible heads, "batch"-tier requests take the highest-accuracy
     head (quality-first — the caller already said it can wait), everything
-    else takes the lowest per-shard ``flops_per_query``; ties break toward
-    the earlier candidate. ``fallback`` (default "exact") serves requests
-    no candidate is eligible for."""
+    else takes the lowest per-shard ``flops_per_query``; flops ties break
+    on ``bytes_per_query`` (the decode-step HBM profile — how the fused
+    Pallas head beats the equal-flops jnp screened head), then toward the
+    earlier candidate. ``fallback`` (default "exact") serves requests no
+    candidate is eligible for."""
 
     def __init__(self, candidates: Iterable[str],
                  accuracy: Optional[Dict[str, float]] = None,
@@ -145,7 +147,16 @@ class CostAwarePolicy(RoutingPolicy):
         def cost(meta):
             f = meta.get("flops_per_query")
             return math.inf if f is None or math.isnan(f) else f
-        return min(eligible, key=lambda nm: cost(nm[1]))[0]
+
+        def mem_cost(meta):
+            # memory-profile tie-break between equal-flops heads: the fused
+            # Pallas head does the same MACs as the jnp screened head but
+            # moves far fewer HBM bytes per decode step, and should win
+            # regardless of candidate order
+            b = meta.get("bytes_per_query")
+            return math.inf if b is None or math.isnan(b) else b
+        return min(eligible, key=lambda nm: (cost(nm[1]),
+                                             mem_cost(nm[1])))[0]
 
 
 def route_requests(requests: Sequence[ServeRequest], policy: RoutingPolicy,

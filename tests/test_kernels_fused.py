@@ -1,0 +1,300 @@
+"""Fused in-VMEM subset-softmax + top-k kernel: bit-identical parity vs the
+unfused ``screened_topk_tpu`` path (which itself is held to the jnp/core
+reference by test_kernels.py), §4.2 logZ correctness, the all-sentinel −inf
+safety contract, Gumbel-max sampling, and the {1, 2, 8}-shard matrix for the
+``screened-sharded`` fused local path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import heads
+from repro.core.screening import ScreenParams, candidates_to_padded
+from repro.kernels.ops import (pack_head_blocks, screened_candidate_logits_tpu,
+                               screened_fused_topk_tpu, screened_topk_tpu)
+from repro.kernels.screen import V_BLK
+
+
+def _fixture(seed, L, d, r, K, B, weights="normal"):
+    rng = np.random.default_rng(seed)
+    if weights == "normal":
+        W = rng.standard_normal((L, d))
+    elif weights == "ties":        # heavily quantized → dense logit ties
+        W = np.round(rng.standard_normal((L, d)) * 2) / 2
+    else:                          # all logits exactly equal
+        W = np.zeros((L, d))
+    W = jnp.asarray(W, jnp.float32)
+    b = jnp.zeros((L,), jnp.float32) if weights != "normal" else \
+        jnp.asarray(rng.standard_normal((L,)), jnp.float32)
+    Wb, bb = pack_head_blocks(W, b)
+    n_blk = Wb.shape[0]
+    v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+    # sentinels interleaved with valid slots (harder than the packed layout)
+    cand = jnp.asarray(rng.integers(0, n_blk + 2, (r, K)), jnp.int32)
+    if weights == "ties":
+        h = jnp.asarray(np.round(rng.standard_normal((B, d))) * 0.5,
+                        jnp.float32)
+    else:
+        h = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    return Wb, bb, v, cand, h, n_blk
+
+
+@pytest.mark.parametrize("k", [1, 5, 64])
+@pytest.mark.parametrize("L,d,r,K,B", [
+    (1500, 128, 6, 4, 9),      # vocab NOT a multiple of 128 (padded block)
+    (1024, 64, 3, 8, 4),       # exact multiple
+    (130, 32, 2, 2, 7),        # tiny vocab, 2 blocks, second nearly empty
+])
+def test_fused_bit_identical_to_unfused(L, d, r, K, B, k):
+    Wb, bb, v, cand, h, _ = _fixture(L + d + k, L, d, r, K, B)
+    ids_u, vals_u = screened_topk_tpu(Wb, bb, v, cand, h, k=k)
+    ids_f, vals_f, logz = screened_fused_topk_tpu(Wb, bb, v, cand, h, k=k)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(vals_f), np.asarray(vals_u))
+    # logZ == logsumexp over the unfused candidate row (allclose: the
+    # online accumulation associates differently). Rows whose routed
+    # candidate union is all-sentinel report −inf by contract, where the
+    # reference logsumexp over NEG_INF masks yields ≈ NEG_INF.
+    logits, _ = screened_candidate_logits_tpu(Wb, bb, v, cand, h)
+    ref = np.asarray(jax.scipy.special.logsumexp(logits, axis=-1))
+    got = np.asarray(logz)
+    has_cand = ref > -1e29
+    np.testing.assert_allclose(got[has_cand], ref[has_cand],
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.isneginf(got[~has_cand]))
+
+
+@pytest.mark.parametrize("weights", ["ties", "equal"])
+@pytest.mark.parametrize("k", [1, 5, 64])
+def test_fused_tie_break_matches_lax_topk(weights, k):
+    """Dense ties (quantized and all-equal logits, duplicate candidate
+    blocks): the in-kernel running merge must reproduce jax.lax.top_k's
+    lowest-flattened-index tie-break bit for bit."""
+    rng = np.random.default_rng(k)
+    L, d, r, K, B = 700, 64, 5, 6, 8
+    Wb, bb, v, _, h, n_blk = _fixture(k, L, d, r, K, B, weights=weights)
+    cand = jnp.asarray(rng.integers(0, n_blk, (r, K)), jnp.int32)  # dups
+    ids_u, vals_u = screened_topk_tpu(Wb, bb, v, cand, h, k=k)
+    ids_f, vals_f, _ = screened_fused_topk_tpu(Wb, bb, v, cand, h, k=k)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(vals_f), np.asarray(vals_u))
+
+
+def test_fused_all_sentinel_row_no_nan():
+    """A row whose candidate union is all-sentinel: ids are the sentinel,
+    vals are NEG_INF (bit-identical to unfused), logZ is −inf — and the
+    head's topk_logprobs maps it to probability 0 (NEG_INF), never NaN."""
+    Wb, bb, v, _, h, n_blk = _fixture(3, 500, 32, 3, 4, 5)
+    cand = jnp.full((3, 4), n_blk + 1, jnp.int32)        # every slot empty
+    ids_u, vals_u = screened_topk_tpu(Wb, bb, v, cand, h, k=5)
+    ids_f, vals_f, logz = screened_fused_topk_tpu(Wb, bb, v, cand, h, k=5)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(vals_f), np.asarray(vals_u))
+    assert np.all(np.asarray(ids_f) == n_blk * V_BLK)
+    assert np.all(np.isneginf(np.asarray(logz)))
+    assert not np.any(np.isnan(np.asarray(logz)))
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_head_topk_logprobs_all_sentinel_regression(fused):
+    """ScreenedPallasHead.topk_logprobs on an all-sentinel screen: finite
+    NEG_INF log-probs (probability 0 on the empty candidate space), no NaN
+    — the −inf-safe logZ contract, on BOTH sides of the fused= escape
+    hatch (the knob must not change semantics)."""
+    rng = np.random.default_rng(0)
+    L, d = 300, 32
+    W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
+    b = jnp.zeros((L,), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((6, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, d)), jnp.float32)
+    n_blk = -(-L // V_BLK)
+    screen = ScreenParams(v=v,
+                          cand_idx=jnp.full((2, 4), n_blk, jnp.int32),
+                          cand_len=jnp.zeros((2,), jnp.int32),
+                          vocab_size=L, block=V_BLK)
+    head = heads.get("screened-pallas", W=W, b=b, screen=screen, fused=fused)
+    ids, lp = head.topk_logprobs(h, 5)
+    lp = np.asarray(lp, np.float32)
+    assert not np.any(np.isnan(lp))
+    assert np.all(lp <= -1e29)                   # probability 0 everywhere
+    assert np.all(np.asarray(ids) == n_blk * V_BLK)
+
+
+@pytest.fixture(scope="module")
+def head_fixture():
+    rng = np.random.default_rng(11)
+    L, d, r, B = 450, 48, 4, 12
+    W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(L) * 0.1, jnp.float32)
+    h = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+    n_blk = -(-L // V_BLK)
+    maskb = np.ones((r, n_blk), bool)
+    idxb, lensb = candidates_to_padded(maskb, L, block=V_BLK)
+    screen = ScreenParams(v=v, cand_idx=jnp.asarray(idxb),
+                          cand_len=jnp.asarray(lensb), vocab_size=L,
+                          block=V_BLK)
+    return dict(W=W, b=b, h=h, screen=screen, L=L, B=B)
+
+
+@pytest.mark.parametrize("k", [1, 5, 64])
+def test_head_fused_escape_hatch_parity(head_fixture, k):
+    """fused=True (default) and fused=False return identical topk ids/vals
+    and allclose logprobs — the escape hatch is a pure perf knob."""
+    fx = head_fixture
+    fused = heads.get("screened-pallas", W=fx["W"], b=fx["b"],
+                      screen=fx["screen"])
+    unfused = heads.get("screened-pallas", W=fx["W"], b=fx["b"],
+                        screen=fx["screen"], fused=False)
+    assert fused.fused and not unfused.fused
+    fi, fv = fused.topk(fx["h"], k)
+    ui, uv = unfused.topk(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(ui))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(uv))
+    fli, flp = fused.topk_logprobs(fx["h"], k)
+    uli, ulp = unfused.topk_logprobs(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(fli), np.asarray(uli))
+    np.testing.assert_allclose(np.asarray(flp), np.asarray(ulp),
+                               rtol=1e-5, atol=1e-5)
+    # the memory cost model must reflect the fusion
+    assert fused.bytes_per_query < unfused.bytes_per_query
+    assert fused.flops_per_query == unfused.flops_per_query
+    assert fused.describe()["bytes_per_query"] == fused.bytes_per_query
+
+
+def test_head_fused_sampling(head_fixture):
+    """Gumbel-max fused sampling: greedy at t=0 (bit-identical argmax),
+    in-vocab draws at t=1, and the empirical argmax share dominates under a
+    peaked distribution."""
+    fx = head_fixture
+    head = heads.get("screened-pallas", W=fx["W"], b=fx["b"],
+                     screen=fx["screen"])
+    eids, _ = heads.get("exact", W=fx["W"], b=fx["b"]).topk(fx["h"], 1)
+    g = np.asarray(head.sample(jax.random.key(0), fx["h"], temperature=0.0))
+    np.testing.assert_array_equal(g, np.asarray(eids)[:, 0])
+    draws = np.stack([np.asarray(head.sample(jax.random.key(i), fx["h"],
+                                             temperature=1.0))
+                      for i in range(32)])
+    assert draws.min() >= 0 and draws.max() < fx["L"]
+    assert len(np.unique(draws)) > 1             # actually stochastic
+    # sharp temperature concentrates on the exact argmax
+    cold = np.stack([np.asarray(head.sample(jax.random.key(100 + i),
+                                            fx["h"], temperature=0.05))
+                     for i in range(8)])
+    agree = (cold == np.asarray(eids)[:, 0][None, :]).mean()
+    assert agree > 0.9, agree
+    # nucleus sampling takes the unfused path and stays in-vocab
+    s = np.asarray(head.sample(jax.random.key(5), fx["h"], temperature=1.0,
+                               top_p=0.9))
+    assert s.min() >= 0 and s.max() < fx["L"]
+
+
+# -- sharded fused local path: {1, 2, 8}-shard matrix ------------------------
+
+LS = 203          # not divisible by 2 or 8; 2 global blocks of 128
+
+SHARD_COUNTS = [1,
+                pytest.param(2, marks=pytest.mark.multidevice),
+                pytest.param(8, marks=pytest.mark.multidevice)]
+
+
+@pytest.fixture(scope="module")
+def sharded_fixture():
+    rng = np.random.default_rng(23)
+    d, r, B = 32, 4, 16
+    W = jnp.asarray(rng.standard_normal((LS, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(LS) * 0.1, jnp.float32)
+    h = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+    n_blk = -(-LS // V_BLK)
+    maskb = np.ones((r, n_blk), bool)                # full block coverage
+    idxb, lensb = candidates_to_padded(maskb, LS, block=V_BLK)
+    screen = ScreenParams(v=v, cand_idx=jnp.asarray(idxb),
+                          cand_len=jnp.asarray(lensb), vocab_size=LS,
+                          block=V_BLK)
+    return dict(W=W, b=b, h=h, screen=screen,
+                exact=heads.get("exact", W=W, b=b),
+                pallas=heads.get("screened-pallas", W=W, b=b, screen=screen))
+
+
+def _require_devices(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices (have {jax.device_count()})")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("k", [1, 5, 40])
+def test_sharded_fused_local_bit_identical_to_exact(sharded_fixture,
+                                                    n_shards, k):
+    """screened-sharded with local='pallas' (shard-local scoring through the
+    fused kernel) == exact on ids at every shard count, vocab not divisible
+    by the shard count, k above and below the per-shard candidate width."""
+    _require_devices(n_shards)
+    fx = sharded_fixture
+    head = heads.get("screened-sharded", W=fx["W"], b=fx["b"],
+                     screen=fx["screen"], n_shards=n_shards, local="pallas")
+    assert head.local == "pallas" and head.Ls % V_BLK == 0
+    eids, evals = fx["exact"].topk(fx["h"], k)
+    ids, vals = head.topk(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(eids))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(evals),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(head.next(fx["h"])),
+                                  np.asarray(eids)[:, 0])
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("k", [5, 40])
+def test_sharded_fused_local_matches_unsharded_pallas(sharded_fixture,
+                                                      n_shards, k):
+    """The sharded fused local path reproduces the unsharded fused head:
+    identical ids, allclose logprobs (the per-shard logZ pieces recombine
+    to the global candidate logZ); sampling (word-gather path) stays
+    in-vocab and greedy at t=0."""
+    _require_devices(n_shards)
+    fx = sharded_fixture
+    head = heads.get("screened-sharded", W=fx["W"], b=fx["b"],
+                     screen=fx["screen"], n_shards=n_shards, local="pallas")
+    pids, plp = fx["pallas"].topk_logprobs(fx["h"], k)
+    ids, lp = head.topk_logprobs(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(pids))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(plp),
+                               rtol=1e-5, atol=1e-5)
+    s = np.asarray(head.sample(jax.random.key(1), fx["h"], temperature=1.0))
+    assert s.min() >= 0 and s.max() < LS
+    t0 = head.sample(jax.random.key(2), fx["h"], temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t0),
+                                  np.asarray(fx["pallas"].topk(fx["h"], 1)[0])[:, 0])
+
+
+@pytest.mark.multidevice
+def test_sharded_fused_block_tables_partitioned(sharded_fixture, multidevice):
+    """local='pallas' placement: each shard holds its own (1, r, Kb) block
+    slab, and shards past the vocab (blocks 2..7 of an 8-way 203-vocab
+    split) hold all-sentinel slabs — the in-shard all-sentinel path."""
+    fx = sharded_fixture
+    head = heads.get("screened-sharded", W=fx["W"], b=fx["b"],
+                     screen=fx["screen"], n_shards=8, local="pallas")
+    assert {s.data.shape[0] for s in head.cand_blocks.addressable_shards} \
+        == {1}
+    tab = np.asarray(jax.device_get(head.cand_blocks))
+    nbs = head.Ls // V_BLK
+    assert np.all(tab[2:] == nbs)               # no blocks past the vocab
+    assert np.any(tab[0] < nbs)                 # shard 0 owns block 0
+
+
+def test_sharded_local_validation():
+    """Unknown local backend and word-screen + pallas both fail fast."""
+    rng = np.random.default_rng(1)
+    W = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    b = jnp.zeros((64,), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    idx, lens = candidates_to_padded(np.ones((2, 64), bool), 64)
+    word_screen = ScreenParams(v=v, cand_idx=jnp.asarray(idx),
+                               cand_len=jnp.asarray(lens), vocab_size=64)
+    with pytest.raises(ValueError):
+        heads.get("screened-sharded", W=W, b=b, screen=word_screen,
+                  n_shards=1, local="tpu")
+    with pytest.raises(AssertionError):
+        heads.get("screened-sharded", W=W, b=b, screen=word_screen,
+                  n_shards=1, local="pallas")
