@@ -10,6 +10,7 @@ argument.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import pickle
 import time
@@ -98,6 +99,40 @@ def get_artifacts():
     params = jax.tree_util.tree_map(jnp.asarray, blob["params"])
     return (cfg, model, params, blob["W"], blob["b"], blob["Htr"],
             blob["ytr"], blob["Hte"], blob["yte"], blob["targets"])
+
+
+def update_bench_json(section: str, payload: dict,
+                      path: str = "BENCH_serving.json") -> str:
+    """Merge one benchmark's machine-readable results into a shared JSON
+    file (one top-level key per benchmark, so serve_mixed and
+    serve_continuous accumulate into the same ``BENCH_serving.json`` and
+    the perf trajectory is diffable across PRs). NaN/inf are serialized as
+    null — the file must stay strict-JSON parseable."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}                     # corrupt/partial file: start over
+
+    def _clean(o):
+        if isinstance(o, dict):
+            return {k: _clean(v) for k, v in o.items()}
+        if isinstance(o, (list, tuple)):
+            return [_clean(v) for v in o]
+        if isinstance(o, float) and (o != o or o in (float("inf"),
+                                                     float("-inf"))):
+            return None
+        if hasattr(o, "item"):            # numpy scalar
+            return _clean(o.item())
+        return o
+
+    data[section] = _clean(payload)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:

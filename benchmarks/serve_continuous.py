@@ -1,0 +1,168 @@
+"""Continuous-batching heavy-traffic harness: Poisson arrivals, mixed
+heads and tiers, admission control — the open-loop load test the paper's
+deployment story needs.
+
+Unlike serve_mixed.py (one pre-assembled batch through ``serve_batch``),
+this drives ``ContinuousScheduler`` the way live traffic would: request
+arrival times are drawn from a Poisson process (exponential inter-arrival
+gaps at ``--rate`` requests/s), each request is submitted when the wall
+clock reaches its arrival time, and the scheduler ticks continuously —
+requests JOIN running decode streams at sequence boundaries, finish at
+different times, and over-budget arrivals are rejected or downgraded by a
+``BudgetAdmission`` policy wired to the head catalog's
+``flops_per_query``.
+
+Reported: sustained tokens/s, reject/downgrade rates, per-head tokens/s,
+p50/p95 request latency (submission → last token), max queue depth, and
+the recompile count between warmup and the measured run (expected 0 — the
+whole point of fixed-width streams over the LRU step cache). A
+machine-readable section is merged into ``BENCH_serving.json``.
+
+    PYTHONPATH=src python benchmarks/serve_continuous.py            # full
+    PYTHONPATH=src python benchmarks/serve_continuous.py --reduced  # CI
+
+With >1 jax device the standard tier rides "screened-sharded", putting the
+mesh-aware stream path under load.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import update_bench_json
+    from benchmarks.serve_mixed import build_engine
+except ImportError:                        # script's own dir is sys.path[0]
+    from common import update_bench_json
+    from serve_mixed import build_engine
+
+from repro.serving import (BudgetAdmission, ContinuousScheduler,
+                           ServeRequest, ServeResult, TierPolicy)
+from repro.serving.scheduler import TIER_DEADLINES
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total arrivals (default 16 reduced / 64)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate, requests/s "
+                         "(default 200 reduced / 50)")
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--budget-x", type=float, default=3.0,
+                    help="flops budget as a multiple of the priciest "
+                         "candidate head's flops_per_query (drives a "
+                         "nonzero reject/downgrade rate under burst)")
+    ap.add_argument("--deadline-scale", type=float, default=10.0,
+                    help="multiply TIER_DEADLINES by this (default 10: "
+                         "CPU/interpret decode is orders slower than the "
+                         "TPU the sub-second tiers assume; set 1.0 to "
+                         "measure preemption churn)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output file ('' disables)")
+    args = ap.parse_args(argv)
+    n_req = args.requests or (16 if args.reduced else 64)
+    rate = args.rate or (200.0 if args.reduced else 50.0)
+    max_new = args.max_new or (8 if args.reduced else 32)
+
+    cfg, corpus, engine = build_engine(args.reduced, args.seed)
+
+    standard = "screened-sharded" if jax.device_count() > 1 else "svd"
+    policy = TierPolicy({"realtime": "screened", "standard": standard,
+                         "batch": "exact"}, default="screened")
+    tiers = ["realtime", "standard", "batch"]
+    prompts = corpus.sample_batch(n_req, 16, seed=42)
+    requests = []
+    for i, p in enumerate(prompts):
+        sampled = (i % 6 == 5)
+        requests.append(ServeRequest(
+            prompt=p, max_new=max_new, latency_tier=tiers[i % 3],
+            temperature=0.8 if sampled else None,
+            top_p=0.95 if sampled else 1.0, seed=7))
+
+    # flops budget off the same catalog admission reads; generous enough
+    # that steady-state traffic flows, tight enough that a Poisson burst
+    # sheds load (the reject path must be exercised, not just compiled)
+    catalog = engine.head_catalog(tuple(policy.candidates))
+    top_flops = max(m["flops_per_query"] for m in catalog.values())
+    budget = args.budget_x * top_flops
+
+    # warmup: compile every (candidate head × greedy/sample) stream combo
+    # the measured run could touch. Routing alone does not bound this —
+    # admission may DOWNGRADE any request (greedy or sampled) onto any
+    # cheaper cataloged head, so the warmup pins each combo explicitly via
+    # the request.head escape hatch instead of trusting the policy's map.
+    warm_p = corpus.sample_batch(2, 16, seed=7)
+    warmup = []
+    for name in catalog:
+        warmup.append(ServeRequest(prompt=warm_p[0], max_new=2, head=name))
+        warmup.append(ServeRequest(prompt=warm_p[1], max_new=2, head=name,
+                                   temperature=0.8, top_p=0.95, seed=7))
+    ContinuousScheduler(engine, policy=policy, max_slots=args.max_slots,
+                        max_streams=2 * len(catalog)).serve(warmup)
+    counts0 = engine.compiled_step_counts()
+
+    deadlines = {t: s * args.deadline_scale for t, s in TIER_DEADLINES.items()}
+    sched = ContinuousScheduler(
+        engine, policy=policy,
+        admission=BudgetAdmission(flops_budget=budget),
+        max_slots=args.max_slots, max_streams=8, deadlines=deadlines)
+    rng = np.random.default_rng(args.seed)
+    gaps = rng.exponential(1.0 / rate, size=n_req)
+    arrivals = np.cumsum(gaps)
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n_req or sched.busy:
+        now = time.perf_counter() - t0
+        while nxt < n_req and arrivals[nxt] <= now:
+            sched.submit(requests[nxt])
+            nxt += 1
+        if sched.busy:
+            sched.step()
+        elif nxt < n_req:                 # idle until the next arrival
+            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    counts1 = engine.compiled_step_counts()
+    recompiles = sum(counts1.values()) - sum(counts0.values())
+
+    stats = sched.stats
+    snap = stats.snapshot()
+    results = sched.results()
+    completed_tokens = sum(len(r.tokens) for r in results
+                           if isinstance(r, ServeResult))
+    print(f"\n[serve_continuous] vocab={cfg.vocab_size} arrivals={n_req} "
+          f"rate={rate:.0f}/s max_new={max_new} "
+          f"devices={jax.device_count()} flops_budget={budget:.3g}")
+    print(f"[serve_continuous] {completed_tokens} tokens in {wall:.2f}s = "
+          f"{completed_tokens / wall:.0f} tok/s sustained | admitted "
+          f"{stats.admitted}/{stats.submitted} (rejected {stats.rejected}, "
+          f"downgraded {stats.downgraded}, preempted {stats.preempted})")
+    print(f"[serve_continuous] latency p50 {snap['latency']['p50_s']:.3f}s "
+          f"p95 {snap['latency']['p95_s']:.3f}s | max queue depth "
+          f"{stats.max_queue_depth} | recompiles after warmup {recompiles} "
+          f"(expected 0)")
+    print(f"{'head':<18}{'requests':>9}{'tokens':>8}{'tok/s':>10}")
+    for head, d in snap["per_head"].items():
+        print(f"{head:<18}{d['requests']:>9}{d['tokens']:>8}"
+              f"{d['tokens_per_s']:>10.0f}")
+    if args.json:
+        path = update_bench_json("serve_continuous", {
+            "devices": jax.device_count(), "vocab": cfg.vocab_size,
+            "arrivals": n_req, "rate": rate, "max_new": max_new,
+            "reduced": args.reduced, "flops_budget": budget,
+            "wall_s": wall, "completed_tokens": completed_tokens,
+            "tokens_per_s": completed_tokens / wall,
+            "recompiles": recompiles, **snap,
+        }, path=args.json)
+        print(f"[serve_continuous] wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

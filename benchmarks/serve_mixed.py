@@ -13,6 +13,11 @@ mixed traffic reuses each head's one compiled step).
 With more than one jax device (e.g. XLA_FLAGS=
 --xla_force_host_platform_device_count=8) the standard tier rides
 "screened-sharded", exercising the mesh-aware step path under load.
+
+Alongside the human-readable table the run merges a machine-readable
+section into ``BENCH_serving.json`` (per-head tokens/s, p50/p95 request
+latency, recompile counts — see benchmarks/README.md) so the serving perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -24,6 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.common import update_bench_json
+except ImportError:
+    from common import update_bench_json  # script's own dir is sys.path[0]
+
 from repro.configs import L2SConfig, TrainConfig, get_config
 from repro.core import collect_contexts, fit_l2s
 from repro.data import ZipfMarkovCorpus, make_lm_batches
@@ -31,6 +41,7 @@ from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim import adamw_init
 from repro.serving import DecodeEngine, ServeRequest, TierPolicy
+from repro.utils.timing import LatencyTracker
 
 
 def build_engine(reduced: bool, seed: int):
@@ -68,6 +79,8 @@ def main(argv=None):
                     help="total concurrent requests (default 12 reduced / 48)")
     ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output file ('' disables)")
     args = ap.parse_args(argv)
     n_req = args.requests or (12 if args.reduced else 48)
     max_new = args.max_new or (8 if args.reduced else 32)
@@ -113,6 +126,8 @@ def main(argv=None):
           f"{len(by_head)} heads, {engine._cache_size()} cached steps")
     print(f"{'head':<18}{'requests':>9}{'tokens':>8}{'tok/s':>10}"
           f"{'recompiles':>11}")
+    per_head_json = {}
+    latency = LatencyTracker()
     for head, rs in sorted(by_head.items()):
         # per-head throughput: serve only this head's requests (still warm),
         # pinned via the explicit-head escape hatch
@@ -123,9 +138,27 @@ def main(argv=None):
         toks = sum(len(r.tokens) for r in rs)
         print(f"{head:<18}{len(rs):>9}{toks:>8}{toks / t_head:>10.0f}"
               f"{recompiles.get(head, 0):>11}")
+        per_head_json[head] = {"requests": len(rs), "tokens": toks,
+                               "decode_s": t_head,
+                               "tokens_per_s": toks / t_head,
+                               "recompiles": recompiles.get(head, 0)}
+        # batch-mode latency: every request in the sub-batch observes the
+        # whole sub-batch's wall time (they finish together)
+        for _ in rs:
+            latency.record(t_head)
     new_compiles = sum(max(0, v) for v in recompiles.values())
     print(f"[serve_mixed] recompiles caused by the mixed batch: "
           f"{new_compiles} (expected 0)")
+    if args.json:
+        path = update_bench_json("serve_mixed", {
+            "devices": jax.device_count(), "vocab": cfg.vocab_size,
+            "requests": n_req, "max_new": max_new, "reduced": args.reduced,
+            "total_tokens": total_tokens, "mixed_s": t_mixed,
+            "tokens_per_s": total_tokens / t_mixed,
+            "recompiles": new_compiles, "latency": latency.snapshot(),
+            "per_head": per_head_json,
+        }, path=args.json)
+        print(f"[serve_mixed] wrote {path}")
     return 0
 
 

@@ -6,6 +6,12 @@ serves ``ServeRequest`` batches through both heads via
 ``DecodeEngine.serve_batch`` + ``StaticPolicy``, reporting decode time and
 token agreement.
 
+``--scheduler`` serves the same traffic through the continuous-batching
+``ContinuousScheduler`` instead: mixed latency tiers, a ``BudgetAdmission``
+policy against the head catalog's flops numbers, and a ``ServerStats``
+report (admit/reject/downgrade counts, per-head tokens/s, p50/p95
+latency).
+
 A fast head that needs a screen (``--head screened`` without ``--l2s``)
 fails BEFORE training with exit code 2 and the fix-it message — the
 screening factories raise a typed ``MissingScreenError``.
@@ -36,6 +42,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="ptb-small-lstm")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--l2s", action="store_true")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching "
+                         "ContinuousScheduler (admission control + live "
+                         "ServerStats) instead of one serve_batch call")
     ap.add_argument("--head", default=None,
                     help="registry name of the fast decode head served "
                          "against exact (screened, screened-sharded, "
@@ -114,6 +124,9 @@ def main(argv=None):
     requests = [ServeRequest(prompt=p, max_new=args.max_new)
                 for p in prompts]
 
+    if args.scheduler:
+        return _serve_scheduler(engine, requests, head_name)
+
     t0 = time.time()
     exact = engine.serve_batch(requests, policy=StaticPolicy("exact"))
     t_exact = time.time() - t0
@@ -133,6 +146,49 @@ def main(argv=None):
             (f.tokens == e.tokens).mean() for f, e in zip(fast, exact)]))
         print(f"[serve] {head_name} decode:  {t_fast:.2f}s  "
               f"token agreement {agree:.3f}")
+    return 0
+
+
+def _serve_scheduler(engine, requests, head_name):
+    """--scheduler mode: continuous batching with admission control.
+
+    Traffic is the launcher's request set re-tiered round-robin
+    (realtime / standard / batch); the fast head (when available) serves
+    the realtime tier, "exact" everything else. The flops budget is sized
+    to the catalog so a burst sheds load through the typed reject path."""
+    import dataclasses
+
+    from repro.serving import (BudgetAdmission, ContinuousScheduler,
+                               ServeResult, TierPolicy)
+
+    fast = head_name if head_name not in (None, "exact") else None
+    candidates = tuple(dict.fromkeys(filter(None, (fast, "exact"))))
+    catalog = engine.head_catalog(candidates)
+    if fast is not None and fast not in catalog:
+        fast = None                      # unbuildable in this engine
+    policy = TierPolicy({"realtime": fast or "exact"}, default="exact")
+    budget = 4.0 * max(m["flops_per_query"] for m in catalog.values())
+    tiers = ["realtime", "standard", "batch"]
+    traffic = [dataclasses.replace(r, latency_tier=tiers[i % 3])
+               for i, r in enumerate(requests)]
+
+    sched = ContinuousScheduler(engine, policy=policy,
+                                admission=BudgetAdmission(flops_budget=budget),
+                                max_slots=4)
+    t0 = time.time()
+    results = sched.serve(traffic)
+    wall = time.time() - t0
+    snap = sched.stats.snapshot()
+    tokens = sum(len(r.tokens) for r in results if isinstance(r, ServeResult))
+    print(f"[serve] scheduler: {tokens} tokens in {wall:.2f}s = "
+          f"{tokens / max(wall, 1e-9):.0f} tok/s | admitted "
+          f"{snap['admitted']}/{snap['submitted']} rejected "
+          f"{snap['rejected']} downgraded {snap['downgraded']} "
+          f"preempted {snap['preempted']}")
+    print(f"[serve] scheduler: latency p50 {snap['latency']['p50_s']:.3f}s "
+          f"p95 {snap['latency']['p95_s']:.3f}s | per-head "
+          + ", ".join(f"{h}: {d['requests']} req {d['tokens_per_s']:.0f} "
+                      f"tok/s" for h, d in snap["per_head"].items()))
     return 0
 
 

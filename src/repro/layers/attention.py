@@ -201,31 +201,53 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 def attn_decode(params, x1, cache, pos, cfg: ModelConfig,
                 window: Optional[int] = None):
-    """One-token decode. x1: (B, 1, d); pos: scalar int32 (absolute position).
+    """One-token decode. x1: (B, 1, d); pos: scalar int32 absolute position,
+    or a (B,) int32 vector of PER-ROW positions (continuous batching: rows
+    of one batched decode step may sit at different depths after a request
+    joined mid-stream — see ``DecodeStream`` in repro.serving.engine).
 
     Returns (out (B, 1, d), new_cache). Ring-buffer semantics when ``window``
     (or cfg.sliding_window) is set and the cache S equals that window.
+    The scalar and vector paths write identical K/V values and build
+    identical masks for rows at equal positions, so per-row results are
+    bit-identical across the two.
     """
     B = x1.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    pvec = pos if per_row else jnp.broadcast_to(pos, (B,))
     if cfg.positional == "mrope":
-        p3 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1, 3))
+        p3 = jnp.broadcast_to(pvec[:, None, None], (B, 1, 3))
         q, k, v = _project_qkv(params, x1, cfg, p3)
     else:
-        p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
-        q, k, v = _project_qkv(params, x1, cfg, p)
+        q, k, v = _project_qkv(params, x1, cfg, pvec[:, None])
     S = cache["k"].shape[1]
     w = window if window is not None else cfg.sliding_window
     is_ring = w is not None and S == w
-    slot = (pos % S) if is_ring else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    if is_ring:
-        valid = jnp.arange(S) < jnp.minimum(pos + 1, S)      # (S,)
+    if per_row:
+        # each row writes its own cache slot: scatter instead of a shared
+        # dynamic_update_slice. Out-of-range positions (an idle stream slot
+        # parked at 0 past its end) clamp like dynamic_update_slice would.
+        slot = (pvec % S) if is_ring else jnp.minimum(pvec, S - 1)
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        if is_ring:
+            valid = jnp.arange(S)[None, :] < jnp.minimum(pvec + 1, S)[:, None]
+        else:
+            valid = jnp.arange(S)[None, :] <= pvec[:, None]      # (B, S)
+        mask = valid[:, None, :]
     else:
-        valid = jnp.arange(S) <= pos
-    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+        slot = (pos % S) if is_ring else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if is_ring:
+            valid = jnp.arange(S) < jnp.minimum(pos + 1, S)      # (S,)
+        else:
+            valid = jnp.arange(S) <= pos
+        mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
     out = _sdpa(q, ck, cv, mask, cfg)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return out, {"k": ck, "v": cv}

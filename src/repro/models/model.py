@@ -112,7 +112,9 @@ class Model:
 
     def decode_step(self, params, token, cache, pos,
                     window: Optional[int] = None):
-        """token: (B,) int32; pos: scalar absolute position. → (h (B, d), cache)."""
+        """token: (B,) int32; pos: scalar absolute position, or a (B,) int32
+        vector of per-row positions (continuous batching — rows decoding at
+        different depths; see attn_decode). → (h (B, d), cache)."""
         cfg = self.cfg
         x1 = embed_tokens(params["embed"], token[:, None], cfg)     # (B, 1, d)
         if cfg.family == "lstm":

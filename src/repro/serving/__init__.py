@@ -1,5 +1,7 @@
-from repro.serving.engine import DecodeEngine, GenerationResult
+from repro.serving.engine import DecodeEngine, DecodeStream, GenerationResult
 from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.scheduler import (AdmissionRejected, BudgetAdmission,
+                                     ContinuousScheduler, ServerStats)
 from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
                                   RoutingPolicy, StaticPolicy, TierPolicy,
                                   route_requests)
@@ -8,8 +10,10 @@ from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
 # delegates to the matching repro.heads backend
 from repro.serving.sampling import greedy_next, screened_greedy_next
 
-__all__ = ["DecodeEngine", "GenerationResult",
+__all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
            "ServeRequest", "ServeResult",
            "RoutingPolicy", "StaticPolicy", "TierPolicy", "CostAwarePolicy",
            "DEFAULT_ACCURACY", "route_requests",
+           "ContinuousScheduler", "ServerStats", "BudgetAdmission",
+           "AdmissionRejected",
            "greedy_next", "screened_greedy_next"]

@@ -53,16 +53,35 @@ class ServeRequest:
     head: Optional[str] = None
 
     def __post_init__(self):
+        # validate EVERYTHING the decode loop consumes up front: a bad k or
+        # top_p otherwise only surfaces as a shape/NaN failure deep inside a
+        # jitted step, long after the request was accepted
         self.prompt = np.asarray(self.prompt, np.int32)
         if self.prompt.ndim != 1:
             raise ValueError(f"ServeRequest.prompt must be 1-D (Tp,), got "
                              f"shape {self.prompt.shape}")
         if self.max_new < 1:
-            raise ValueError("ServeRequest.max_new must be >= 1")
+            raise ValueError(
+                f"ServeRequest.max_new must be >= 1, got {self.max_new}")
+        if self.k < 1:
+            raise ValueError(f"ServeRequest.k must be >= 1, got {self.k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"ServeRequest.top_p must be in (0, 1], got "
+                             f"{self.top_p}")
 
     @property
     def sampled(self) -> bool:
         return self.temperature is not None
+
+    def sampling_key(self) -> tuple:
+        """The sampling statics ONE jitted step (and one continuous decode
+        stream) can carry: ``("greedy",)`` or ``("sample", temperature,
+        top_p, seed)``. Shared by ``group_key`` and the scheduler's stream
+        signatures so the two batching layers can never drift."""
+        if not self.sampled:
+            return ("greedy",)
+        return ("sample", float(self.temperature), float(self.top_p),
+                int(self.seed))
 
     def group_key(self, head_name: str) -> tuple:
         """Requests sharing this key run as ONE padded batched decode: same
@@ -70,10 +89,7 @@ class ServeRequest:
         sampling statics (temperature / top_p are baked into the engine's
         jitted sample step; the seed keeps draws per-request
         deterministic)."""
-        kind = ("greedy",) if not self.sampled else \
-            ("sample", float(self.temperature), float(self.top_p),
-             int(self.seed))
-        return (head_name, int(self.prompt.shape[0])) + kind
+        return (head_name, int(self.prompt.shape[0])) + self.sampling_key()
 
 
 @dataclass

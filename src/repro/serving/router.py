@@ -42,6 +42,31 @@ DEFAULT_ACCURACY: Dict[str, float] = {
 }
 
 
+def head_eligible(name: str, meta: dict, request: ServeRequest,
+                  accuracy: Dict[str, float],
+                  memory_budget_bytes: Optional[int] = None,
+                  wide_k: Optional[int] = None) -> bool:
+    """The ONE eligibility test routing and admission share: accuracy floor
+    (raised to exactness for k > ``wide_k`` when given — an approximate
+    head's candidate list may not contain k valid words), sampling support,
+    and the per-device memory fit ``memory_bytes / n_shards``. Keeping it
+    here means a fix to eligibility can never make ``CostAwarePolicy`` and
+    ``BudgetAdmission`` silently disagree."""
+    floor = request.accuracy_floor
+    if wide_k is not None and request.k > wide_k:
+        floor = max(floor, 1.0)
+    if accuracy.get(name, 0.0) < floor:
+        return False
+    if request.sampled and not meta.get("supports_sampling", True):
+        return False
+    if memory_budget_bytes is not None:
+        per_device = meta.get("memory_bytes", 0) / \
+            max(1, meta.get("n_shards") or 1)
+        if per_device > memory_budget_bytes:
+            return False
+    return True
+
+
 class RoutingPolicy:
     """Protocol: ``route(request, catalog) -> head name``.
 
@@ -120,19 +145,9 @@ class CostAwarePolicy(RoutingPolicy):
         self.candidates = cands if fallback in cands else cands + (fallback,)
 
     def _eligible(self, name: str, meta: dict, request: ServeRequest) -> bool:
-        floor = request.accuracy_floor
-        if request.k > self.wide_k:
-            floor = max(floor, 1.0)
-        if self.accuracy.get(name, 0.0) < floor:
-            return False
-        if request.sampled and not meta.get("supports_sampling", True):
-            return False
-        if self.memory_budget_bytes is not None:
-            per_device = meta.get("memory_bytes", 0) / \
-                max(1, meta.get("n_shards") or 1)
-            if per_device > self.memory_budget_bytes:
-                return False
-        return True
+        return head_eligible(name, meta, request, self.accuracy,
+                             memory_budget_bytes=self.memory_budget_bytes,
+                             wide_k=self.wide_k)
 
     def route(self, request: ServeRequest, catalog: Dict[str, dict]) -> str:
         eligible = [(name, catalog[name]) for name in self.candidates

@@ -1,0 +1,18 @@
+"""Continuous-batching scheduler subsystem: admission control, head-keyed
+decode streams with join-at-step, tier deadlines with preemption, and live
+``ServerStats`` telemetry. See ``scheduler.ContinuousScheduler`` for the
+tick loop and ``queue`` for the admission types."""
+from repro.serving.scheduler.queue import (TIER_DEADLINES, TIER_PRIORITY,
+                                           AcceptAll, AdmissionDecision,
+                                           AdmissionPolicy, AdmissionRejected,
+                                           BudgetAdmission, QueuedRequest,
+                                           RequestQueue, SchedulerLoad,
+                                           head_flops, tier_priority)
+from repro.serving.scheduler.scheduler import ContinuousScheduler
+from repro.serving.scheduler.stats import ServerStats
+
+__all__ = ["ContinuousScheduler", "ServerStats", "RequestQueue",
+           "QueuedRequest", "AdmissionPolicy", "AdmissionDecision",
+           "AdmissionRejected", "AcceptAll", "BudgetAdmission",
+           "SchedulerLoad", "TIER_DEADLINES", "TIER_PRIORITY",
+           "head_flops", "tier_priority"]

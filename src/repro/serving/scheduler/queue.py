@@ -1,0 +1,251 @@
+"""Request queue + admission control for the continuous-batching scheduler.
+
+``RequestQueue`` stamps every submission with an arrival time and a
+per-tier deadline (``TIER_DEADLINES``); an ``AdmissionPolicy`` then decides
+— ONCE, at submission, against the scheduler's current load — whether the
+request is **accepted** onto the queue, **downgraded** to a cheaper head
+that still clears its ``accuracy_floor``, or **rejected** with a typed
+``AdmissionRejected`` result. The budgets the shipped ``BudgetAdmission``
+enforces are computed from the same ``head_catalog()`` metadata the routing
+policies weigh: ``flops_per_query`` (per-shard — the decode step's critical
+path, see benchmarks/README.md) bounds concurrent in-flight work, and
+``memory_bytes / n_shards`` bounds which heads are eligible at all.
+
+Admission is deliberately load-shedding, not load-hiding: a request the
+budget cannot carry is refused NOW (the caller can retry, re-tier, or go
+elsewhere) instead of silently queueing behind traffic it will never catch
+— the backpressure half of the paper's latency story.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.request import ServeRequest
+from repro.serving.router import DEFAULT_ACCURACY, head_eligible
+
+# How long each latency tier is willing to wait for its FULL decode,
+# submission to last token, in seconds. "batch" traffic never expires (and
+# is therefore the first preempted when higher tiers starve — see
+# ContinuousScheduler). Override per deployment via RequestQueue(deadlines=)
+# / ContinuousScheduler(deadlines=).
+TIER_DEADLINES: Dict[str, float] = {
+    "realtime": 0.1,
+    "standard": 1.0,
+    "batch": math.inf,
+}
+
+# Smaller = more urgent. Preemption only ever flows downhill: a waiting
+# request may displace running work of a strictly LARGER priority value.
+TIER_PRIORITY: Dict[str, int] = {"realtime": 0, "standard": 1, "batch": 2}
+
+
+def tier_priority(tier: str) -> int:
+    """Unknown tiers rank with "standard"."""
+    return TIER_PRIORITY.get(tier, TIER_PRIORITY["standard"])
+
+
+@dataclass
+class QueuedRequest:
+    """One admitted request plus the bookkeeping the scheduler tracks:
+    arrival/deadline stamps from the queue's clock, the head admission
+    resolved it to (``None`` = the engine's default head instance), and the
+    per-step flops cost it was charged against the admission budget."""
+
+    id: int
+    request: ServeRequest = field(repr=False)
+    head: Optional[str]
+    arrival: float
+    deadline: float
+    cost: float = 0.0
+    placed_at: Optional[float] = None
+
+    @property
+    def tier(self) -> str:
+        return self.request.latency_tier
+
+    @property
+    def priority(self) -> int:
+        return tier_priority(self.tier)
+
+
+class RequestQueue:
+    """FIFO of admitted-but-unplaced requests with arrival/deadline stamps.
+
+    The clock is injectable so tests (and simulated-time benchmarks) drive
+    deadlines deterministically; production uses ``time.monotonic``."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 deadlines: Optional[Dict[str, float]] = None):
+        self.clock = clock
+        self.deadlines = dict(TIER_DEADLINES if deadlines is None
+                              else deadlines)
+        self._items: List[QueuedRequest] = []
+        self._next_id = 0
+
+    def push(self, request: ServeRequest, head: Optional[str],
+             cost: float = 0.0,
+             req_id: Optional[int] = None) -> QueuedRequest:
+        """``req_id`` lets the owner (the scheduler) key queue entries with
+        ITS result ids — one id sequence, not two drifting ones. Standalone
+        use falls back to the queue's own counter."""
+        now = self.clock()
+        horizon = self.deadlines.get(request.latency_tier, math.inf)
+        if req_id is None:
+            req_id = self._next_id
+            self._next_id += 1
+        qr = QueuedRequest(id=req_id, request=request, head=head,
+                           arrival=now, deadline=now + horizon, cost=cost)
+        self._items.append(qr)
+        return qr
+
+    def remove(self, qr: QueuedRequest) -> None:
+        self._items.remove(qr)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self) -> Iterator[QueuedRequest]:
+        return iter(list(self._items))     # snapshot: callers mutate mid-scan
+
+    @property
+    def flops_pending(self) -> float:
+        return sum(qr.cost for qr in self._items)
+
+
+# -- admission ----------------------------------------------------------------
+
+@dataclass
+class SchedulerLoad:
+    """What the scheduler is already committed to, as admission sees it."""
+    flops_in_flight: float = 0.0     # per-step flops of queued + running work
+    queued: int = 0                  # admitted requests not yet in a slot
+    active: int = 0                  # occupied decode slots
+
+
+@dataclass
+class AdmissionDecision:
+    """``action`` is "accept" | "downgrade" | "reject"; ``head`` names the
+    serving head for accept/downgrade (``None`` keeps the engine default)."""
+    action: str
+    head: Optional[str] = None
+    reason: str = ""
+
+
+@dataclass
+class AdmissionRejected:
+    """Typed terminal result for a request the scheduler did not complete.
+
+    ``stage`` is "admission" (refused at submit — never decoded) or
+    "preempt" (evicted mid-decode; ``tokens`` then carries the partial
+    decode and ``head`` the head that served it). Sits alongside
+    ``ServeResult`` in the scheduler's result list so callers switch on
+    type, not on sentinel values."""
+
+    request: ServeRequest = field(repr=False)
+    reason: str = ""
+    stage: str = "admission"
+    head: Optional[str] = None
+    tokens: Optional[np.ndarray] = None
+
+
+def head_flops(catalog: Dict[str, dict], name: Optional[str]) -> float:
+    """Per-step flops charge for serving on ``name`` (0 when unknown —
+    an uncataloged engine-default head costs nothing against the budget
+    because the budget has no number to compare it to)."""
+    meta = catalog.get(name) or {}
+    f = meta.get("flops_per_query")
+    if f is None or (isinstance(f, float) and math.isnan(f)):
+        return 0.0
+    return float(f)
+
+
+class AdmissionPolicy:
+    """Protocol: ``admit(request, head, catalog, load) -> AdmissionDecision``.
+
+    ``head`` is the name routing resolved (engine-default requests arrive
+    under the default head's name); ``catalog`` is ``head_catalog()``
+    metadata for every candidate the scheduler knows; ``load`` is the
+    current ``SchedulerLoad``. Implementations must be pure decision logic
+    — the scheduler owns queueing and charging."""
+
+    def admit(self, request: ServeRequest, head: str,
+              catalog: Dict[str, dict], load: SchedulerLoad
+              ) -> AdmissionDecision:
+        raise NotImplementedError
+
+
+class AcceptAll(AdmissionPolicy):
+    """No backpressure — every request is admitted on its routed head (the
+    parity configuration: scheduler results must match plain serve_batch)."""
+
+    def admit(self, request, head, catalog, load):
+        return AdmissionDecision("accept", head)
+
+
+class BudgetAdmission(AdmissionPolicy):
+    """Admission against per-head flops and memory budgets from the catalog.
+
+    ``flops_budget``: ceiling on the summed per-step ``flops_per_query`` of
+    all in-flight work (queued + running). A request whose routed head would
+    exceed it is first offered a DOWNGRADE — the cheapest cataloged head
+    that still clears its ``accuracy_floor`` (``DEFAULT_ACCURACY`` ordering,
+    overridable), supports its sampling mode, fits ``memory_budget_bytes``
+    per device, and fits the remaining budget — and is REJECTED with a typed
+    reason only when no such head exists. ``queue_limit`` bounds the
+    admitted-but-unplaced backlog regardless of flops.
+    """
+
+    def __init__(self, flops_budget: Optional[float] = None,
+                 memory_budget_bytes: Optional[int] = None,
+                 queue_limit: Optional[int] = None,
+                 accuracy: Optional[Dict[str, float]] = None):
+        self.flops_budget = flops_budget
+        self.memory_budget_bytes = memory_budget_bytes
+        self.queue_limit = queue_limit
+        self.accuracy = {**DEFAULT_ACCURACY, **(accuracy or {})}
+
+    def _eligible(self, name: str, meta: dict, request: ServeRequest) -> bool:
+        # the same test CostAwarePolicy runs (router.head_eligible), minus
+        # the wide-k exactness demand — that is a routing-quality concern,
+        # not a capacity one
+        return head_eligible(name, meta, request, self.accuracy,
+                             memory_budget_bytes=self.memory_budget_bytes)
+
+    def admit(self, request, head, catalog, load):
+        if self.queue_limit is not None and load.queued >= self.queue_limit:
+            return AdmissionDecision(
+                "reject", reason=f"queue full: {load.queued} waiting >= "
+                                 f"limit {self.queue_limit}")
+        budget_left = math.inf if self.flops_budget is None else \
+            self.flops_budget - load.flops_in_flight
+        meta = catalog.get(head)
+        if meta is not None and self._eligible(head, meta, request) \
+                and head_flops(catalog, head) <= budget_left:
+            return AdmissionDecision("accept", head)
+        # routed head over budget or ineligible: cheapest eligible stand-in
+        alternates = sorted(
+            (head_flops(catalog, n), n) for n, m in catalog.items()
+            if n != head and self._eligible(n, m, request))
+        for flops, name in alternates:
+            if flops <= budget_left:
+                return AdmissionDecision(
+                    "downgrade", head=name,
+                    reason=f"rerouted {head} -> {name} "
+                           f"({flops:.3g} flops fits remaining budget)")
+        if meta is None:
+            reason = f"head {head!r} not in catalog and no eligible stand-in"
+        elif not self._eligible(head, meta, request):
+            reason = (f"no eligible head: accuracy_floor="
+                      f"{request.accuracy_floor} / memory budget excludes "
+                      f"all candidates")
+        else:
+            reason = (f"flops budget exhausted: in-flight "
+                      f"{load.flops_in_flight:.3g} + {head} "
+                      f"{head_flops(catalog, head):.3g} > "
+                      f"{self.flops_budget:.3g}")
+        return AdmissionDecision("reject", reason=reason)

@@ -1,0 +1,334 @@
+"""The continuous-batching scheduler: admission → microbatch → retire.
+
+``ContinuousScheduler`` turns ``DecodeEngine`` from a batch-decode library
+into a server. Requests arrive one at a time (``submit``); each is routed
+to a head (explicit ``request.head``, else the ``RoutingPolicy``), passed
+through the ``AdmissionPolicy`` against the current load, and — if admitted
+— queued with an arrival stamp and tier deadline. Each ``step()`` tick
+then:
+
+  1. PLACES waiting requests into head-keyed ``DecodeStream`` microbatches
+     (fixed width ``max_slots``; join-at-step — a request enters a RUNNING
+     stream's free pad slot at a sequence boundary, no recompile, no wait
+     for the stream to drain);
+  2. ADVANCES every live stream one token through the engine's cached
+     jitted steps;
+  3. RETIRES finished sequences as ``ServeResult``s (bit-identical greedy
+     tokens to ``serve_batch`` — each stream row is computed independently);
+  4. PREEMPTS lower-tier work for starving higher-tier requests — a victim
+     must be past its deadline (or best-effort "batch" work, which has
+     none) AND its eviction must actually free capacity the waiter can
+     use; it surfaces as a typed ``AdmissionRejected(stage="preempt")``
+     with its partial tokens.
+
+``drain()`` runs ticks until the system is empty and returns results in
+submission order; ``serve(requests)`` is submit-all + drain, the drop-in
+continuous counterpart to ``engine.serve_batch``.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serving.engine import DecodeEngine, DecodeStream
+from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.scheduler.queue import (AcceptAll, AdmissionPolicy,
+                                           AdmissionRejected, QueuedRequest,
+                                           RequestQueue, SchedulerLoad,
+                                           head_flops, tier_priority)
+from repro.serving.scheduler.stats import ServerStats
+
+
+class ContinuousScheduler:
+    """Admission-controlled continuous batching over one ``DecodeEngine``.
+
+    ``policy``      RoutingPolicy resolving requests to head names
+                    (``None`` = everything on the engine's default head).
+    ``admission``   AdmissionPolicy (default ``AcceptAll`` — pure
+                    continuous batching, no backpressure).
+    ``max_slots``   width of every decode stream (pad slots = live
+                    capacity; fixed so warm steps never recompile).
+    ``max_streams`` concurrent streams; idle streams are recycled LRU when
+                    a new (head, sampling) signature needs a lane.
+    ``deadlines``   {tier: seconds} override of ``TIER_DEADLINES``.
+    ``clock``       injectable monotonic clock for arrival/deadline/latency
+                    bookkeeping (tests pass a fake; throughput telemetry
+                    always uses the real wall clock).
+    """
+
+    def __init__(self, engine: DecodeEngine, policy=None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 max_slots: int = 4, max_streams: int = 8,
+                 deadlines: Optional[Dict[str, float]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_slots < 1 or max_streams < 1:
+            raise ValueError("max_slots and max_streams must be >= 1")
+        self.engine = engine
+        self.policy = policy
+        self.admission = admission if admission is not None else AcceptAll()
+        self.max_slots = int(max_slots)
+        self.max_streams = int(max_streams)
+        self.clock = clock
+        self.queue = RequestQueue(clock=clock, deadlines=deadlines)
+        self.stats = ServerStats()
+        self._streams: "OrderedDict[tuple, DecodeStream]" = OrderedDict()
+        self._results: Dict[int, object] = {}
+        self._order: List[int] = []
+        self._next_rid = 0          # monotonic even after pop_results()
+        self._inflight: Dict[int, QueuedRequest] = {}   # placed, not finished
+        self._catalog: Dict[str, dict] = {}
+
+    # -- catalog / routing ---------------------------------------------------
+    def _default_name(self) -> str:
+        return getattr(self.engine.head, "name", "__engine-default__")
+
+    def _ensure_catalog(self, names: Sequence[str]) -> Dict[str, dict]:
+        missing = [n for n in names if n and n not in self._catalog]
+        if missing:
+            self._catalog.update(self.engine.head_catalog(missing))
+        return self._catalog
+
+    def _route(self, request: ServeRequest) -> Optional[str]:
+        """Explicit head > policy > engine default (``None``)."""
+        if request.head is not None:
+            return request.head
+        if self.policy is None:
+            return None
+        catalog = self._ensure_catalog(
+            tuple(getattr(self.policy, "candidates", ())))
+        return self.policy.route(request, catalog)
+
+    def _load(self) -> SchedulerLoad:
+        running = sum(qr.cost for qr in self._inflight.values())
+        return SchedulerLoad(
+            flops_in_flight=self.queue.flops_pending + running,
+            queued=len(self.queue),
+            active=sum(s.n_active for s in self._streams.values()))
+
+    # -- submission (admission happens HERE, against current load) -----------
+    def submit(self, request: ServeRequest) -> int:
+        """Admit-or-refuse one request. Returns its result id; rejected
+        requests get their typed ``AdmissionRejected`` immediately."""
+        Tp = int(request.prompt.shape[0])
+        if Tp + request.max_new > self.engine.max_len:
+            raise ValueError(
+                f"request needs {Tp + request.max_new} cache slots, engine "
+                f"max_len is {self.engine.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._order.append(rid)
+        self.stats.submitted += 1
+        routed = self._route(request)
+        name = routed if routed is not None else self._default_name()
+        # admission's downgrade universe must not depend on submission
+        # history: it is EXACTLY the policy's candidates plus this
+        # request's routed head — never other requests' explicit heads
+        # that happen to sit in the accumulated catalog
+        cand = tuple(getattr(self.policy, "candidates", ())) \
+            if self.policy is not None else ()
+        names = tuple(dict.fromkeys(
+            cand + (() if routed is None else (routed,))))
+        self._ensure_catalog(names)
+        catalog = {n: self._catalog[n] for n in names if n in self._catalog}
+        if routed is None:
+            catalog[name] = self.engine.head.describe()
+        decision = self.admission.admit(request, name, catalog, self._load())
+        if decision.action == "reject":
+            self._results[rid] = AdmissionRejected(
+                request=request, reason=decision.reason, stage="admission")
+            self.stats.rejected += 1
+            return rid
+        if decision.action == "downgrade":
+            self.stats.downgraded += 1
+            head = decision.head
+        else:
+            head = routed        # None keeps the engine default instance
+        qr = self.queue.push(request, head,
+                             cost=head_flops(catalog, decision.head or name),
+                             req_id=rid)
+        self.stats.admitted += 1
+        self.stats.observe_queue(len(self.queue))
+        return rid
+
+    # -- stream management ---------------------------------------------------
+    @staticmethod
+    def _sig(qr: QueuedRequest) -> tuple:
+        """Stream signature: head + the request's ``sampling_key()`` (the
+        same statics serve_batch's group_key carries, minus the prompt
+        length — streams prefill per request, so mixed-length traffic
+        shares a lane, unlike serve_batch's batched prefill groups)."""
+        return (qr.head,) + qr.request.sampling_key()
+
+    def _stream_for(self, qr: QueuedRequest) -> Optional[DecodeStream]:
+        sig = self._sig(qr)
+        stream = self._streams.get(sig)
+        if stream is not None:
+            self._streams.move_to_end(sig)
+            return stream if stream.free_slots else None
+        if len(self._streams) >= self.max_streams:
+            for key, s in list(self._streams.items()):   # recycle idle, LRU
+                if s.idle:
+                    del self._streams[key]
+                    break
+            else:
+                return None
+        req = qr.request
+        stream = self.engine.open_stream(
+            head=qr.head, width=self.max_slots, temperature=req.temperature,
+            top_p=req.top_p, seed=req.seed)
+        self._streams[sig] = stream
+        return stream
+
+    # -- the tick ------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduler tick. Returns the number of requests that reached
+        a terminal state (completed or preempted) this tick."""
+        self.stats.ticks += 1
+        terminal = 0
+        # 1. place waiting requests — priority-ordered, FIFO within a tier.
+        #    Plain FIFO would hand a preemption-freed slot to the next
+        #    lower-tier request in line, which stage 3 would immediately
+        #    evict again for the same starving waiter: a cascade that
+        #    destroys every queued lower-tier request ahead of one
+        #    realtime arrival. Priority placement gives the slot to the
+        #    waiter that justified the eviction.
+        for qr in sorted(self.queue, key=lambda q: (q.priority, q.id)):
+            stream = self._stream_for(qr)
+            if stream is None:
+                continue
+            t0 = time.perf_counter()
+            stream.join(qr.request, tag=qr)
+            dt = time.perf_counter() - t0
+            self.queue.remove(qr)
+            now = self.clock()
+            qr.placed_at = now
+            self._inflight[qr.id] = qr
+            self.stats.queue_wait.record(now - qr.arrival)
+            self.stats.record_decode(stream.head_name, 1, dt)  # first token
+        # 2. advance streams, retire finished sequences
+        for stream in list(self._streams.values()):
+            if stream.n_active:
+                n_tok = stream.n_active
+                t0 = time.perf_counter()
+                finished = stream.step()
+                self.stats.record_decode(stream.head_name, n_tok,
+                                         time.perf_counter() - t0)
+            else:
+                finished = stream.pop_finished()
+            for qr, request, tokens in finished:
+                now = self.clock()
+                self._results[qr.id] = ServeResult(
+                    tokens=tokens, head=stream.head_name, request=request,
+                    group_size=stream.width)
+                self._inflight.pop(qr.id, None)
+                self.stats.record_completion(
+                    stream.head_name, now - qr.arrival,
+                    on_time=now <= qr.deadline)
+                terminal += 1
+        # 3. preempt for starving waiters. A victim must be STRICTLY lower
+        #    tier than the waiter and expendable — past its deadline, or
+        #    best-effort work that never had one (the "batch" tier's inf
+        #    deadline means "no completion promise", not "immune"). And the
+        #    eviction must actually help THIS waiter: either the victim sits
+        #    in the waiter's own stream (pad slot reusable next tick), or
+        #    the waiter needs a new lane and the eviction idles one for
+        #    recycling. At most one eviction per waiter per tick.
+        now = self.clock()
+        lane_freed_for: set = set()         # sigs a new lane was idled for
+        for qr in self.queue:               # still queued = blocked this tick
+            sig = self._sig(qr)
+            own = self._streams.get(sig)
+            if own is not None and own.free_slots:
+                continue                    # placeable next tick as-is
+            if own is None and sig in lane_freed_for:
+                continue                    # this tick's eviction already
+                                            # idles a lane for this signature
+            # most expendable eligible victim across the lanes that help:
+            # lowest tier first (highest priority value) — deadline-less
+            # batch work yields before merely-late standard work
+            best = None                     # (priority, slot, tag, stream)
+            for cand in self._streams.values():
+                if own is not None:
+                    if cand is not own:
+                        continue            # only its own lane's slots help
+                elif cand.n_active != 1:
+                    continue                # eviction must idle the lane
+                for slot, tag in cand.occupied():
+                    if tag.priority > qr.priority and \
+                            (now > tag.deadline or math.isinf(tag.deadline)) \
+                            and (best is None or tag.priority > best[0]):
+                        best = (tag.priority, slot, tag, cand)
+            if best is None:
+                continue
+            _, slot, tag, victim_stream = best
+            _, request, partial = victim_stream.evict(slot)
+            self._results[tag.id] = AdmissionRejected(
+                request=request, stage="preempt",
+                head=victim_stream.head_name, tokens=partial,
+                reason=f"preempted: {tag.tier} work (deadline "
+                       f"{tag.deadline:.3f}, now {now:.3f}) displaced "
+                       f"by waiting {qr.tier} traffic")
+            self._inflight.pop(tag.id, None)
+            self.stats.preempted += 1
+            terminal += 1
+            if own is None:
+                lane_freed_for.add(sig)
+        self.stats.observe_queue(len(self.queue))
+        return terminal
+
+    # -- draining ------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(len(self.queue)) or any(
+            not s.idle for s in self._streams.values())
+
+    def drain(self, max_ticks: Optional[int] = None) -> List[object]:
+        """Tick until queue and streams are empty; results in submission
+        order (``ServeResult`` | ``AdmissionRejected``)."""
+        ticks = 0
+        stalled = 0
+        while self.busy:
+            before = len(self._results)
+            active = any(s.n_active for s in self._streams.values())
+            self.step()
+            ticks += 1
+            progressed = active or len(self._results) > before
+            stalled = 0 if progressed else stalled + 1
+            if stalled > 2:
+                raise RuntimeError(
+                    f"scheduler stalled: {len(self.queue)} queued requests "
+                    f"cannot be placed (max_streams={self.max_streams} "
+                    f"busy with other signatures and nothing preemptable)")
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+        return self.results()
+
+    def results(self) -> List[object]:
+        """Terminal results so far, submission order, in-flight skipped.
+        NON-consuming: retains history, right for batch-style serve/drain
+        use. A long-lived server loop should call ``pop_results()``."""
+        return [self._results[r] for r in self._order if r in self._results]
+
+    def pop_results(self) -> List[object]:
+        """Terminal results so far in submission order, CONSUMED — the
+        scheduler forgets them, so a server loop calling this each tick
+        holds memory proportional to in-flight work, not to every token
+        array ever served. In-flight submissions keep their place and
+        surface in a later call."""
+        out, rest = [], []
+        for rid in self._order:
+            if rid in self._results:
+                out.append(self._results.pop(rid))
+            else:
+                rest.append(rid)
+        self._order = rest
+        return out
+
+    def serve(self, requests: Sequence[ServeRequest]) -> List[object]:
+        """Submit everything, drain, return results in request order — the
+        continuous-batching counterpart of ``engine.serve_batch``."""
+        for r in requests:
+            self.submit(r)
+        return self.drain()

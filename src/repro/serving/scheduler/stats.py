@@ -1,0 +1,111 @@
+"""Live serving telemetry for the continuous-batching scheduler.
+
+``ServerStats`` is the one object every serving surface reads: the
+scheduler updates it in place each tick, ``launch/serve.py --scheduler``
+prints it, and the serving benchmarks serialize ``snapshot()`` into
+``BENCH_serving.json`` so the numbers are comparable across PRs.
+
+Two clocks feed it, deliberately: arrival/deadline/latency quantities come
+from the scheduler's INJECTABLE clock (deterministic under test / simulated
+time), while per-head throughput is always measured on the real
+``time.perf_counter`` wall — tokens/s against a fake clock would be
+fiction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.utils.timing import LatencyTracker
+
+
+class ServerStats:
+    """Counters + sliding-window latency percentiles for one scheduler.
+
+    Admission funnel: ``submitted = admitted + rejected`` (downgrades are
+    admitted; ``downgraded`` counts how many of those were rerouted).
+    Completion funnel: every admitted request ends ``completed`` or
+    ``preempted``. ``latency`` tracks submission→last-token seconds for
+    completed requests; ``queue_wait`` tracks submission→slot seconds for
+    everything that got a slot."""
+
+    def __init__(self, latency_window: int = 4096):
+        self.submitted = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.downgraded = 0
+        self.preempted = 0
+        self.completed = 0
+        self.ticks = 0
+        self.tokens = 0
+        self.queue_depth = 0
+        self.max_queue_depth = 0
+        self.deadline_met = 0
+        self.deadline_missed = 0
+        self.latency = LatencyTracker(latency_window)
+        self.queue_wait = LatencyTracker(latency_window)
+        # name -> {"requests", "tokens", "decode_s"}; tokens/s derived in
+        # snapshot() so the accumulators stay mergeable
+        self.per_head: Dict[str, Dict[str, float]] = {}
+
+    # -- update hooks (called by ContinuousScheduler) ------------------------
+    def _head(self, name: str) -> Dict[str, float]:
+        return self.per_head.setdefault(
+            name, {"requests": 0, "tokens": 0, "decode_s": 0.0})
+
+    def record_decode(self, head: str, n_tokens: int, seconds: float) -> None:
+        """One decode tick (or join prefill) on ``head``: ``n_tokens``
+        tokens materialized in ``seconds`` of real wall time."""
+        d = self._head(head)
+        d["tokens"] += int(n_tokens)
+        d["decode_s"] += float(seconds)
+        self.tokens += int(n_tokens)
+
+    def record_completion(self, head: str, latency_s: float,
+                          on_time: bool) -> None:
+        self.completed += 1
+        self._head(head)["requests"] += 1
+        self.latency.record(latency_s)
+        if on_time:
+            self.deadline_met += 1
+        else:
+            self.deadline_missed += 1
+
+    def observe_queue(self, depth: int) -> None:
+        self.queue_depth = int(depth)
+        self.max_queue_depth = max(self.max_queue_depth, self.queue_depth)
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def reject_rate(self) -> float:
+        return self.rejected / self.submitted if self.submitted else math.nan
+
+    def snapshot(self) -> dict:
+        """JSON-ready view — what BENCH_serving.json stores per benchmark."""
+        per_head = {}
+        for name, d in sorted(self.per_head.items()):
+            s = d["decode_s"]
+            per_head[name] = {
+                "requests": int(d["requests"]), "tokens": int(d["tokens"]),
+                "decode_s": s,
+                "tokens_per_s": (d["tokens"] / s) if s > 0 else math.nan,
+            }
+        return {
+            "submitted": self.submitted, "admitted": self.admitted,
+            "rejected": self.rejected, "downgraded": self.downgraded,
+            "preempted": self.preempted, "completed": self.completed,
+            "ticks": self.ticks, "tokens": self.tokens,
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "deadline_met": self.deadline_met,
+            "deadline_missed": self.deadline_missed,
+            "reject_rate": self.reject_rate,
+            "latency": self.latency.snapshot(),
+            "queue_wait": self.queue_wait.snapshot(),
+            "per_head": per_head,
+        }
+
+    def __repr__(self) -> str:     # pragma: no cover - debug aid
+        return (f"ServerStats(submitted={self.submitted}, "
+                f"completed={self.completed}, rejected={self.rejected}, "
+                f"preempted={self.preempted}, tokens={self.tokens})")

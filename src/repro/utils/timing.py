@@ -1,9 +1,12 @@
-"""Wall-clock timing helpers for CPU benchmarks."""
+"""Wall-clock timing helpers for CPU benchmarks and serving telemetry."""
 from __future__ import annotations
 
+import math
 import time
+from collections import deque
 
 import jax
+import numpy as np
 
 
 class Timer:
@@ -19,6 +22,63 @@ class Timer:
         self.ms = self.s * 1e3
         self.us = self.s * 1e6
         return False
+
+
+class LatencyTracker:
+    """Streaming percentile tracker over a sliding window of samples.
+
+    ``record(seconds)`` appends one observation; queries (``percentile``,
+    ``p50``, ``p95``, ``mean``) answer over the most recent ``window``
+    samples — O(window log window) per query, O(1) per record, bounded
+    memory — which is what a live serving loop wants: current behavior, not
+    an all-history average that a warmup spike skews forever. ``count``
+    still reports ALL samples ever recorded (telemetry totals).
+
+    Shared by ``repro.serving.scheduler.ServerStats`` and the serving
+    benchmarks (serve_mixed / serve_continuous), so their p50/p95 columns
+    mean the same thing. Empty trackers answer NaN rather than raising —
+    a snapshot taken before traffic arrives is not an error.
+    """
+
+    def __init__(self, window: int = 4096):
+        if window < 1:
+            raise ValueError(f"LatencyTracker window must be >= 1: {window}")
+        self.window = window
+        self._buf: "deque[float]" = deque(maxlen=window)
+        self.count = 0
+
+    def record(self, seconds: float) -> None:
+        self._buf.append(float(seconds))
+        self.count += 1
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]; np.percentile (linear interpolation) over the
+        window, NaN when empty instead of numpy's warning+nan path."""
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"percentile q must be in [0, 100]: {q}")
+        if not self._buf:
+            return math.nan
+        return float(np.percentile(list(self._buf), q))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95.0)
+
+    @property
+    def mean(self) -> float:
+        return sum(self._buf) / len(self._buf) if self._buf else math.nan
+
+    def snapshot(self) -> dict:
+        """JSON-ready summary of the current window."""
+        return {"count": self.count, "window_count": len(self._buf),
+                "p50_s": self.p50, "p95_s": self.p95, "mean_s": self.mean}
 
 
 def bench_wall(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -87,6 +87,57 @@ def test_decode_matches_forward():
     np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=1e-5)
 
 
+def test_vector_pos_decode_bit_identical_to_scalar():
+    """The per-row position branch (continuous batching): aligned rows give
+    BIT-identical outputs/caches to the scalar path, and rows at DIFFERENT
+    depths each match their own scalar-pos decode."""
+    p, x, pos = _setup(T=8)
+    cache_s = init_cache(CFG, 2, 8, dtype=jnp.float32)
+    cache_v = init_cache(CFG, 2, 8, dtype=jnp.float32)
+    for t in range(8):
+        o_s, cache_s = attn_decode(p, x[:, t:t + 1], cache_s, t, CFG)
+        o_v, cache_v = attn_decode(p, x[:, t:t + 1], cache_v,
+                                   jnp.full((2,), t, jnp.int32), CFG)
+        np.testing.assert_array_equal(np.asarray(o_s), np.asarray(o_v))
+    np.testing.assert_array_equal(np.asarray(cache_s["k"]),
+                                  np.asarray(cache_v["k"]))
+    # divergent depths: row 0 at t, row 1 at t+3 — each row equals a solo
+    # scalar decode of the same (input, position) sequence
+    B1 = 1
+    c0 = init_cache(CFG, B1, 8, dtype=jnp.float32)
+    c1 = init_cache(CFG, B1, 8, dtype=jnp.float32)
+    cv = init_cache(CFG, 2, 8, dtype=jnp.float32)
+    # pre-load row 1 three steps ahead (on both the solo and vector caches)
+    for t in range(3):
+        _, c1 = attn_decode(p, x[1:2, t:t + 1], c1, t, CFG)
+        cv = {k: v.at[1].set(c1[k][0]) for k, v in cv.items()}
+    for t in range(4):
+        o0, c0 = attn_decode(p, x[0:1, t:t + 1], c0, t, CFG)
+        o1, c1 = attn_decode(p, x[1:2, t + 3:t + 4], c1, t + 3, CFG)
+        ov, cv = attn_decode(p, x[jnp.asarray([0, 1]),
+                               jnp.asarray([t, t + 3])][:, None], cv,
+                             jnp.asarray([t, t + 3], jnp.int32), CFG)
+        np.testing.assert_array_equal(np.asarray(ov[0]), np.asarray(o0[0]))
+        np.testing.assert_array_equal(np.asarray(ov[1]), np.asarray(o1[0]))
+
+
+def test_vector_pos_ring_buffer_decode():
+    """Vector-pos path with a ring cache: per-row slots wrap mod window and
+    match the scalar ring decode row-for-row when aligned."""
+    W = 4
+    cfg = dataclasses.replace(CFG, sliding_window=W)
+    p, x, pos = _setup(cfg, T=12)
+    cache_s = init_cache(cfg, 2, 12, dtype=jnp.float32, window=W)
+    cache_v = init_cache(cfg, 2, 12, dtype=jnp.float32, window=W)
+    for t in range(12):
+        o_s, cache_s = attn_decode(p, x[:, t:t + 1], cache_s, t, cfg,
+                                   window=W)
+        o_v, cache_v = attn_decode(p, x[:, t:t + 1], cache_v,
+                                   jnp.full((2,), t, jnp.int32), cfg,
+                                   window=W)
+        np.testing.assert_array_equal(np.asarray(o_s), np.asarray(o_v))
+
+
 def test_ring_buffer_decode_matches_windowed_forward():
     W = 4
     cfg = dataclasses.replace(CFG, sliding_window=W)

@@ -107,6 +107,27 @@ def test_cost_aware_memory_budget_prefers_sharded():
     assert none_fit.route(_req(), CATALOG) == "exact"
 
 
+def test_serve_request_validates_fields_upfront():
+    """Bad k / max_new / top_p must raise typed ValueErrors at construction
+    — not as shape/NaN failures deep inside a jitted decode step."""
+    ok = dict(prompt=np.arange(4), max_new=2)
+    assert ServeRequest(**ok).k == 1
+    for bad in (dict(ok, k=0), dict(ok, k=-3)):
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            ServeRequest(**bad)
+    for bad in (dict(ok, max_new=0), dict(ok, max_new=-1)):
+        with pytest.raises(ValueError, match="max_new must be >= 1"):
+            ServeRequest(**bad)
+    for bad_p in (0.0, -0.2, 1.5):
+        with pytest.raises(ValueError, match=r"top_p must be in \(0, 1\]"):
+            ServeRequest(**ok, top_p=bad_p)
+    # boundary values stay legal
+    assert ServeRequest(**ok, top_p=1.0).top_p == 1.0
+    assert ServeRequest(**ok, top_p=0.5, k=64).k == 64
+    with pytest.raises(ValueError, match="1-D"):
+        ServeRequest(prompt=np.zeros((2, 3)), max_new=2)
+
+
 def test_route_requests_explicit_head_wins():
     pol = StaticPolicy("screened")
     reqs = [_req(), _req(head="exact"), _req()]
@@ -335,6 +356,51 @@ def test_reorder_cache_lstm_rows_follow_src_idx():
         for v in layer.values():
             np.testing.assert_array_equal(np.asarray(v[:, 0]),
                                           [2.0, 2.0, 0.0, 1.0])
+
+
+def test_reorder_cache_transformer_kv_rows_follow_src_idx():
+    """The transformer KV-cache branch (stacked (L, B, S, KV, hd) leaves,
+    batch at axis 1): rows must gather along the BATCH axis, untouched
+    elsewhere — the branch PR 3 left uncovered."""
+    from repro.serving.engine import _reorder_cache
+    cfg = get_config("smollm-360m").reduced()
+    m = build_model(cfg)
+    cache = m.init_cache(4, 8, dtype=jnp.float32)
+    assert set(cache) == {"attn"}
+    tagged = jax.tree_util.tree_map(
+        lambda a: a + jnp.arange(4.0).reshape(
+            (1, 4) + (1,) * (a.ndim - 2)), cache)
+    src = jnp.asarray([2, 2, 0, 1], jnp.int32)
+    re = _reorder_cache(tagged, src, cfg)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(re),
+                         jax.tree_util.tree_leaves(tagged)):
+        assert leaf.shape == ref.shape            # (L, B, S, KV, hd) intact
+        np.testing.assert_array_equal(
+            np.asarray(leaf[:, :, 0, 0, 0]),
+            np.broadcast_to(np.asarray([2.0, 2.0, 0.0, 1.0]),
+                            (leaf.shape[0], 4)))
+        # gathered rows carry their source rows' full contents
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(ref[:, src]))
+
+
+def test_beam_search_transformer_state_follows_surviving_beams():
+    """Beam search on a KV-cache arch: best-beam score == teacher-forced
+    log-prob of the returned sequence, which requires _reorder_cache's
+    stacked-cache branch to move K/V with the beams."""
+    cfg = get_config("smollm-360m").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    eng = DecodeEngine(m, params, max_len=24)
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, 6).astype(np.int32)
+    bm = eng.beam_search(prompt, beam=3, max_new=5)
+    full = np.concatenate([prompt, bm.tokens[0]])
+    h, _ = m.forward(params, {"tokens": jnp.asarray(full[None])})
+    lp = jax.nn.log_softmax(m.logits(params, h).astype(jnp.float32), -1)
+    ref = sum(float(lp[0, len(prompt) - 1 + i, t])
+              for i, t in enumerate(bm.tokens[0]))
+    np.testing.assert_allclose(bm.scores[0], ref, atol=1e-3)
 
 
 def test_beam_search_lstm_state_follows_surviving_beams(trained):

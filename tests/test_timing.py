@@ -1,0 +1,55 @@
+"""utils.timing.LatencyTracker: the streaming percentile helper shared by
+ServerStats and the serving benchmarks."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.utils.timing import LatencyTracker
+
+
+def test_percentiles_match_numpy_linear_interpolation():
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(0.05, size=257)
+    t = LatencyTracker()
+    for x in xs:
+        t.record(x)
+    for q in (0.0, 25.0, 50.0, 95.0, 99.0, 100.0):
+        np.testing.assert_allclose(t.percentile(q), np.percentile(xs, q),
+                                   rtol=1e-12)
+    np.testing.assert_allclose(t.p50, np.percentile(xs, 50), rtol=1e-12)
+    np.testing.assert_allclose(t.p95, np.percentile(xs, 95), rtol=1e-12)
+    np.testing.assert_allclose(t.mean, xs.mean(), rtol=1e-12)
+    assert t.count == len(t) == 257
+
+
+def test_sliding_window_answers_over_recent_samples_only():
+    t = LatencyTracker(window=4)
+    for x in (100.0, 100.0, 100.0, 1.0, 2.0, 3.0, 4.0):
+        t.record(x)
+    # the three 100s fell out of the window; percentiles see [1, 2, 3, 4]
+    assert t.percentile(100.0) == 4.0
+    np.testing.assert_allclose(t.p50, 2.5)
+    assert len(t) == 4 and t.count == 7          # count keeps the total
+    snap = t.snapshot()
+    assert snap["count"] == 7 and snap["window_count"] == 4
+    np.testing.assert_allclose(snap["p50_s"], 2.5)
+
+
+def test_empty_tracker_is_nan_not_an_error():
+    t = LatencyTracker()
+    assert math.isnan(t.p50) and math.isnan(t.p95) and math.isnan(t.mean)
+    assert math.isnan(t.snapshot()["p95_s"])
+    assert len(t) == 0
+
+
+def test_single_sample_and_bad_args():
+    t = LatencyTracker()
+    t.record(0.25)
+    assert t.p50 == t.p95 == t.percentile(0.0) == 0.25
+    with pytest.raises(ValueError):
+        t.percentile(101.0)
+    with pytest.raises(ValueError):
+        t.percentile(-1.0)
+    with pytest.raises(ValueError):
+        LatencyTracker(window=0)
