@@ -39,7 +39,7 @@ except ImportError:                        # script's own dir is sys.path[0]
     from common import update_bench_json
     from serve_mixed import build_engine
 
-from repro.serving import (BudgetAdmission, ContinuousScheduler,
+from repro.serving import (BudgetAdmission, ContinuousScheduler, PagePool,
                            ServeRequest, ServeResult, TierPolicy)
 from repro.serving.scheduler import TIER_DEADLINES
 
@@ -47,6 +47,25 @@ from repro.serving.scheduler import TIER_DEADLINES
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged-KV workload: every prompt = one templated "
+                         "system prompt + a short unique suffix, served "
+                         "over a shared PagePool with a prefix radix "
+                         "cache; reports prefix hit rate, pages in use, "
+                         "HBM residency, COW rate, and greedy parity")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="[shared-prefix] KV page size in token slots "
+                         "(must divide the engine max_len, 80)")
+    ap.add_argument("--pool-pages", type=int, default=256,
+                    help="[shared-prefix] total pool pages (page 0 is the "
+                         "reserved trash page)")
+    ap.add_argument("--template-len", type=int, default=48,
+                    help="[shared-prefix] shared system-prompt tokens")
+    ap.add_argument("--suffix-len", type=int, default=4,
+                    help="[shared-prefix] unique per-request suffix tokens")
+    ap.add_argument("--parity-checks", type=int, default=4,
+                    help="[shared-prefix] completed requests to replay "
+                         "through solo engine.generate for bit-identity")
     ap.add_argument("--requests", type=int, default=None,
                     help="total arrivals (default 16 reduced / 64)")
     ap.add_argument("--rate", type=float, default=None,
@@ -72,6 +91,9 @@ def main(argv=None):
     max_new = args.max_new or (8 if args.reduced else 32)
 
     cfg, corpus, engine = build_engine(args.reduced, args.seed)
+
+    if args.shared_prefix:
+        return _shared_prefix(args, cfg, corpus, engine, n_req, rate)
 
     standard = "screened-sharded" if jax.device_count() > 1 else "svd"
     policy = TierPolicy({"realtime": "screened", "standard": standard,
@@ -113,21 +135,7 @@ def main(argv=None):
         engine, policy=policy,
         admission=BudgetAdmission(flops_budget=budget),
         max_slots=args.max_slots, max_streams=8, deadlines=deadlines)
-    rng = np.random.default_rng(args.seed)
-    gaps = rng.exponential(1.0 / rate, size=n_req)
-    arrivals = np.cumsum(gaps)
-    t0 = time.perf_counter()
-    nxt = 0
-    while nxt < n_req or sched.busy:
-        now = time.perf_counter() - t0
-        while nxt < n_req and arrivals[nxt] <= now:
-            sched.submit(requests[nxt])
-            nxt += 1
-        if sched.busy:
-            sched.step()
-        elif nxt < n_req:                 # idle until the next arrival
-            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
-    wall = time.perf_counter() - t0
+    wall = _drive(sched, requests, rate, args.seed)
     counts1 = engine.compiled_step_counts()
     recompiles = sum(counts1.values()) - sum(counts0.values())
 
@@ -161,6 +169,116 @@ def main(argv=None):
             "recompiles": recompiles, **snap,
         }, path=args.json)
         print(f"[serve_continuous] wrote {path}")
+    return 0
+
+
+def _drive(sched, requests, rate, seed):
+    """Open-loop Poisson arrivals at ``rate`` req/s; returns wall seconds."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(requests)))
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < len(requests) or sched.busy:
+        now = time.perf_counter() - t0
+        while nxt < len(requests) and arrivals[nxt] <= now:
+            sched.submit(requests[nxt])
+            nxt += 1
+        if sched.busy:
+            sched.step()
+        elif nxt < len(requests):         # idle until the next arrival
+            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+    return time.perf_counter() - t0
+
+
+def _shared_prefix(args, cfg, corpus, engine, n_req, rate):
+    """--shared-prefix: templated prompts over one shared ``PagePool``.
+
+    Every request is the SAME template prompt (a long "system prompt")
+    plus a short unique suffix — the agent-serving shape paged KV exists
+    for. A warmup scheduler shares the pool, so it both compiles every
+    stream step the measured run touches AND primes the radix cache with
+    the template's pages; the measured window then sees a per-request
+    prefix hit of template/(template+suffix) tokens, zero step recompiles,
+    and greedy tokens bit-identical to solo ``engine.generate``."""
+    max_new = args.max_new or 8
+    Tp = args.template_len + args.suffix_len
+    if Tp + max_new > engine.max_len:
+        raise SystemExit(f"template+suffix+max_new = {Tp + max_new} exceeds "
+                         f"engine max_len {engine.max_len}")
+    template = corpus.sample_batch(1, args.template_len, seed=5)[0]
+    suffixes = corpus.sample_batch(n_req + 2, args.suffix_len, seed=43)
+    tiers = ["realtime", "standard", "batch"]
+    requests = [ServeRequest(
+        prompt=np.concatenate([template, suffixes[i]]).astype(np.int32),
+        max_new=max_new, latency_tier=tiers[i % 3]) for i in range(n_req)]
+
+    standard = "screened-sharded" if jax.device_count() > 1 else "svd"
+    policy = TierPolicy({"realtime": "screened", "standard": standard,
+                         "batch": "exact"}, default="screened")
+    catalog = engine.head_catalog(tuple(policy.candidates))
+    pool = PagePool(num_pages=args.pool_pages, page_size=args.page_size)
+
+    # warmup shares the POOL: compiles per-head streams + chunked resume
+    # prefill for the template grid AND pins the template's pages in the
+    # radix cache, so the measured window starts hot on both axes
+    warmup = [ServeRequest(
+        prompt=np.concatenate([template, suffixes[n_req + i % 2]])
+        .astype(np.int32), max_new=2, head=name)
+        for i, name in enumerate(catalog)]
+    ContinuousScheduler(engine, policy=policy, max_slots=args.max_slots,
+                        max_streams=len(catalog) + 1,
+                        kv_pool=pool).serve(warmup)
+    counts0 = engine.compiled_step_counts()
+    radix = pool.radix
+    hit0, tot0 = radix.tokens_hit, radix.tokens_total
+
+    deadlines = {t: s * args.deadline_scale
+                 for t, s in TIER_DEADLINES.items()}
+    sched = ContinuousScheduler(engine, policy=policy,
+                                max_slots=args.max_slots, max_streams=8,
+                                deadlines=deadlines, kv_pool=pool)
+    wall = _drive(sched, requests, rate, args.seed)
+    counts1 = engine.compiled_step_counts()
+    recompiles = sum(counts1.values()) - sum(counts0.values())
+    hit_rate = (radix.tokens_hit - hit0) / max(1, radix.tokens_total - tot0)
+
+    results = sched.results()
+    served = [(req, r) for req, r in zip(requests, results)
+              if isinstance(r, ServeResult)]
+    parity = True
+    for req, r in served[:args.parity_checks]:
+        ref = engine.generate(req.prompt[None], req.max_new).tokens[0]
+        parity = parity and bool(np.array_equal(r.tokens, ref))
+
+    snap = sched.stats.snapshot()
+    ptel = snap["pool"]
+    tokens = sum(len(r.tokens) for _, r in served)
+    print(f"\n[serve_shared_prefix] arrivals={n_req} template="
+          f"{args.template_len} suffix={args.suffix_len} page={args.page_size} "
+          f"pool={args.pool_pages} devices={jax.device_count()}")
+    print(f"[serve_shared_prefix] {tokens} tokens in {wall:.2f}s = "
+          f"{tokens / wall:.0f} tok/s | completed {len(served)}/{n_req} "
+          f"(preempted {sched.stats.preempted})")
+    print(f"[serve_shared_prefix] prefix hit rate {hit_rate:.3f} (measured "
+          f"window; cumulative {radix.hit_rate:.3f}) | pages in use "
+          f"{ptel['pages_in_use']}/{ptel['pages_total']} (peak "
+          f"{ptel['peak_pages_in_use']}) | cow {ptel['cow_copies']} | "
+          f"hbm resident {ptel['hbm_resident_bytes']} B")
+    print(f"[serve_shared_prefix] greedy parity {parity} | recompiles after "
+          f"warmup {recompiles} (expected 0)")
+    if args.json:
+        path = update_bench_json("serve_shared_prefix", {
+            "devices": jax.device_count(), "vocab": cfg.vocab_size,
+            "arrivals": n_req, "rate": rate, "max_new": max_new,
+            "reduced": args.reduced, "template_len": args.template_len,
+            "suffix_len": args.suffix_len, "page_size": args.page_size,
+            "pool_pages": args.pool_pages,
+            "wall_s": wall, "completed_tokens": tokens,
+            "tokens_per_s": tokens / wall,
+            "prefix_hit_rate": hit_rate,
+            "greedy_parity": parity, "recompiles": recompiles, **snap,
+        }, path=args.json)
+        print(f"[serve_shared_prefix] wrote {path}")
     return 0
 
 

@@ -155,11 +155,14 @@ def _serve_scheduler(engine, requests, head_name):
     Traffic is the launcher's request set re-tiered round-robin
     (realtime / standard / batch); the fast head (when available) serves
     the realtime tier, "exact" everything else. The flops budget is sized
-    to the catalog so a burst sheds load through the typed reject path."""
+    to the catalog so a burst sheds load through the typed reject path.
+    Families the paged KV pool supports additionally serve over a
+    ``PagePool`` (shared-prefix radix cache + COW pages) and report pool
+    utilization in the log."""
     import dataclasses
 
     from repro.serving import (BudgetAdmission, ContinuousScheduler,
-                               ServeResult, TierPolicy)
+                               PagePool, ServeResult, TierPolicy)
 
     fast = head_name if head_name not in (None, "exact") else None
     candidates = tuple(dict.fromkeys(filter(None, (fast, "exact"))))
@@ -172,9 +175,17 @@ def _serve_scheduler(engine, requests, head_name):
     traffic = [dataclasses.replace(r, latency_tier=tiers[i % 3])
                for i, r in enumerate(requests)]
 
+    kv_pool = None
+    if engine.model.cfg.family in ("lstm", "dense", "moe") \
+            and engine.model.cfg.sliding_window is None:
+        page = 8 if engine.max_len % 8 == 0 else 4
+        while engine.max_len % page:
+            page //= 2                     # max_len is even in practice
+        kv_pool = PagePool(num_pages=4 * (engine.max_len // page),
+                           page_size=page)
     sched = ContinuousScheduler(engine, policy=policy,
                                 admission=BudgetAdmission(flops_budget=budget),
-                                max_slots=4)
+                                max_slots=4, kv_pool=kv_pool)
     t0 = time.time()
     results = sched.serve(traffic)
     wall = time.time() - t0
@@ -189,6 +200,14 @@ def _serve_scheduler(engine, requests, head_name):
           f"p95 {snap['latency']['p95_s']:.3f}s | per-head "
           + ", ".join(f"{h}: {d['requests']} req {d['tokens_per_s']:.0f} "
                       f"tok/s" for h, d in snap["per_head"].items()))
+    if snap.get("pool"):
+        p = snap["pool"]
+        print(f"[serve] scheduler: kv pool {p['pages_in_use']}/"
+              f"{p['pages_total']} pages in use (peak "
+              f"{p['peak_pages_in_use']}, {p['pages_free']} free) | "
+              f"prefix hit rate {p['prefix']['hit_rate']:.3f} | "
+              f"cow {p['cow_copies']} ({p['cow_copies_per_tick']:.2f}/tick) "
+              f"| hbm resident {p['hbm_resident_bytes']} B")
     return 0
 
 

@@ -211,6 +211,15 @@ def attn_decode(params, x1, cache, pos, cfg: ModelConfig,
     The scalar and vector paths write identical K/V values and build
     identical masks for rows at equal positions, so per-row results are
     bit-identical across the two.
+
+    Slot-reuse audit: when a stream evicts a slot and a later request
+    reuses it, the old occupant's K/V rows persist in the cache until the
+    new join's splice overwrites the ENTIRE row (engine._splice_cache
+    replaces all S slots). Between eviction and reuse the idle row keeps
+    decoding parked at pos 0 — its write lands in slot 0 of its own row
+    and its output is discarded, so the ``arange(S) <= pos`` mask plus
+    finite stale values guarantee no leakage into live rows (the same
+    argument attn_decode_paged makes for recycled pages).
     """
     B = x1.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -251,3 +260,53 @@ def attn_decode(params, x1, cache, pos, cfg: ModelConfig,
     out = _sdpa(q, ck, cv, mask, cfg)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return out, {"k": ck, "v": cv}
+
+
+def attn_decode_paged(params, x1, pk, pv, page_table, pos, cfg: ModelConfig):
+    """One-token decode against block-paged KV storage (one layer's pool).
+
+    pk/pv: (N_pages, P, KV, hd) page pool; page_table: (B, n_pages) int32
+    mapping each row's sequence pages to pool pages; pos: (B,) int32
+    per-row positions. Returns (out (B, 1, d), new_pk, new_pv).
+
+    Each row scatter-writes its new K/V at (page_table[row, pos // P],
+    pos % P), then attends over the gathered view pk[page_table] reshaped
+    to a dense (B, n_pages * P, KV, hd) — the contiguous cache's exact
+    shape when n_pages * P == max_len, with identical values at every
+    position <= pos and the identical ``arange(S) <= pos`` keep-mask. That
+    makes greedy paged decode bit-identical to ``attn_decode``'s vector-pos
+    branch: masked scores are NEG_INF exactly, their probabilities exp to
+    exact 0.0, and 0.0 times a finite stale row contributes exact zeros.
+
+    Stale-content discipline (the reuse audit): a freed page keeps its old
+    occupant's rows until someone writes it, and page 0 (the TRASH page)
+    accumulates junk from every idle slot's parked write at (0, 0). Neither
+    can leak: positions beyond a row's ``pos`` are masked out exactly, a
+    fresh join overwrites every in-range row of its pages from its own solo
+    prefill before they become visible, and idle rows (parked at pos 0 over
+    an all-trash page table) have their outputs discarded. The ONLY
+    invariant this rests on is that stale contents stay FINITE — previous
+    K/V values and zero-init are; nothing ever writes inf/NaN into a page.
+    tests/test_kvpool.py poisons freed pages with large values to pin this.
+    """
+    B = x1.shape[0]
+    pvec = jnp.asarray(pos, jnp.int32)
+    if pvec.ndim == 0:
+        pvec = jnp.broadcast_to(pvec, (B,))
+    q, k, v = _project_qkv(params, x1, cfg, pvec[:, None])
+    P = pk.shape[1]
+    n_pages = page_table.shape[1]
+    S = n_pages * P
+    rows = jnp.arange(B)
+    # clamp like the dense path's out-of-range write: an idle slot parked
+    # at 0 lands on the trash page its table points at anyway
+    page = page_table[rows, jnp.minimum(pvec // P, n_pages - 1)]
+    off = pvec % P
+    pk = pk.at[page, off].set(k[:, 0].astype(pk.dtype))
+    pv = pv.at[page, off].set(v[:, 0].astype(pv.dtype))
+    ck = pk[page_table].reshape(B, S, pk.shape[2], pk.shape[3])
+    cv = pv[page_table].reshape(B, S, pv.shape[2], pv.shape[3])
+    valid = jnp.arange(S)[None, :] <= pvec[:, None]          # (B, S)
+    out = _sdpa(q, ck, cv, valid[:, None, :], cfg)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out, pk, pv

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.layers.attention import (attn_decode, attn_forward, attn_forward_kv,
-                                    attn_init, init_cache as attn_init_cache)
+from repro.layers.attention import (attn_decode, attn_decode_paged,
+                                    attn_forward, attn_forward_kv, attn_init,
+                                    init_cache as attn_init_cache)
 from repro.layers.mlp import mlp_apply, mlp_init
 from repro.layers.moe import moe_apply, moe_init
 from repro.layers.norms import norm_apply, norm_init
@@ -288,6 +289,40 @@ def stack_decode(params, x1, cache, pos, cfg: ModelConfig,
 def _decode_attn(p, x, c, pos, cfg, window):
     return attn_decode(p["attn"], norm_apply(p["norm1"], x, cfg.norm), c, pos,
                        cfg, window=window)
+
+
+def stack_decode_paged(params, x1, pool, page_table, pos, cfg: ModelConfig):
+    """One-token decode through the stack against block-paged KV storage.
+
+    ``pool``: {"k", "v"} with a leading layer axis — (L, N_pages, P, KV,
+    hd); ``page_table``: (B, n_pages) int32 shared by every layer (page
+    identity is per-(layer, page): layer l of sequence page j lives at
+    pool[l, page_table[:, j]]). Returns (h (B, 1, d), new_pool).
+
+    Mirrors ``stack_decode``'s scan-over-layers exactly — same block body,
+    same op order — with ``attn_decode_paged`` swapped in for the cache
+    update, which is what keeps paged greedy tokens bit-identical to the
+    contiguous path (see attn_decode_paged)."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged decode supports dense/moe stacks, not {cfg.family}")
+
+    def body(x, xs):
+        p, pk, pv = xs
+        a_out, npk, npv = attn_decode_paged(
+            p["attn"], norm_apply(p["norm1"], x, cfg.norm), pk, pv,
+            page_table, pos, cfg)
+        h = x + a_out
+        if cfg.family == "moe":
+            y, _ = moe_apply(p["moe"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        else:
+            y = mlp_apply(p["mlp"], norm_apply(p["norm2"], h, cfg.norm), cfg)
+        return h + y, (npk, npv)
+
+    x, (nk, nv) = jax.lax.scan(body, x1,
+                               (params["blocks"], pool["k"], pool["v"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, {"k": nk, "v": nv}
 
 
 def _ssm_stack_decode(params, x1, cache, pos, cfg: ModelConfig, window):

@@ -12,7 +12,8 @@ from repro.layers.initializers import dense_init
 from repro.layers.lstm import (lstm_decode_step, lstm_forward, lstm_init,
                                lstm_init_state)
 from repro.layers.rope import mrope_positions
-from repro.layers.transformer import (stack_decode, stack_forward, stack_init,
+from repro.layers.transformer import (stack_decode, stack_decode_paged,
+                                      stack_forward, stack_init,
                                       stack_init_cache, stack_prefill)
 
 
@@ -91,15 +92,28 @@ class Model:
             return {"lstm": lstm_init_state(cfg, batch, dtype)}
         return stack_init_cache(cfg, batch, max_len, dtype, window)
 
-    def prefill(self, params, batch, cache, window: Optional[int] = None):
+    def prefill(self, params, batch, cache, window: Optional[int] = None,
+                resume: bool = False):
         """Forward over the prompt AND prime the decode cache.
 
-        Returns (h (B, T, d), cache). Prompt must fit the cache (slots [0, T))."""
+        Returns (h (B, T, d), cache). Prompt must fit the cache (slots [0, T)).
+
+        ``resume=True`` (LSTM family only) continues from ``cache``'s
+        recurrent state instead of zeros — the paged serving path's
+        prefix-cache compute skip: a scan restarted from a snapshot runs
+        the identical cell sequence, so resumed prefill over a suffix is
+        bit-identical to one-shot prefill over the full prompt."""
         cfg = self.cfg
         if cfg.family == "lstm":
             x = embed_tokens(params["embed"], batch["tokens"], cfg)
-            h, state = lstm_forward(params["lstm"], x, cfg)
+            h, state = lstm_forward(params["lstm"], x, cfg,
+                                    state=cache["lstm"] if resume else None)
             return h, {"lstm": state}
+        if resume:
+            raise NotImplementedError(
+                "resume prefill is LSTM-only: attention-family prefix reuse "
+                "shares KV pages for storage, not prefill compute (chunked "
+                "cross-attention resume is future work — see README)")
         if cfg.family == "vlm":
             tok = embed_tokens(params["embed"], batch["tokens"], cfg)
             pat = jnp.einsum("bpd,de->bpe", batch["patches"], params["vision_proj"])
@@ -123,6 +137,20 @@ class Model:
             return h, {"lstm": new_state}
         h, new_cache = stack_decode(params["stack"], x1, cache, pos, cfg, window)
         return h[:, 0], new_cache
+
+    def decode_step_paged(self, params, token, pool, page_table, pos):
+        """Paged decode step (attention families): K/V live in a shared
+        page pool addressed through ``page_table`` instead of a per-stream
+        contiguous cache. → (h (B, d), new_pool). See stack_decode_paged."""
+        cfg = self.cfg
+        if cfg.family == "lstm":
+            raise NotImplementedError(
+                "LSTM decode carries no per-token KV — paged LSTM streams "
+                "use the ordinary decode_step with logical page accounting")
+        x1 = embed_tokens(params["embed"], token[:, None], cfg)     # (B, 1, d)
+        h, new_pool = stack_decode_paged(params["stack"], x1, pool,
+                                         page_table, pos, cfg)
+        return h[:, 0], new_pool
 
 
 def _text_positions(x):

@@ -1,4 +1,6 @@
 from repro.serving.engine import DecodeEngine, DecodeStream, GenerationResult
+from repro.serving.kvpool import (PagedDecodeStream, PagePool, PoolExhausted,
+                                  RadixCache)
 from repro.serving.request import ServeRequest, ServeResult
 from repro.serving.scheduler import (AdmissionRejected, BudgetAdmission,
                                      ContinuousScheduler, ServerStats)
@@ -11,6 +13,7 @@ from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
 from repro.serving.sampling import greedy_next, screened_greedy_next
 
 __all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
+           "PagePool", "PagedDecodeStream", "PoolExhausted", "RadixCache",
            "ServeRequest", "ServeResult",
            "RoutingPolicy", "StaticPolicy", "TierPolicy", "CostAwarePolicy",
            "DEFAULT_ACCURACY", "route_requests",

@@ -98,6 +98,15 @@ class DecodeEngine:
             lambda p, batch, cache: model.prefill(p, batch, cache))
         self._jit_decode = jax.jit(
             lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos))
+        # paged-serving companions (repro.serving.kvpool): prefill resumed
+        # from a cached recurrent state (LSTM prefix-cache compute skip) and
+        # the page-table decode step for non-jittable heads
+        self._jit_resume_prefill = jax.jit(
+            lambda p, batch, cache: model.prefill(p, batch, cache,
+                                                  resume=True))
+        self._jit_decode_paged = jax.jit(
+            lambda p, tok, pk, pv, table, pos: model.decode_step_paged(
+                p, tok, {"k": pk, "v": pv}, table, pos))
         self.head = self.resolve_head("exact" if head is None else head)
 
     # -- head resolution ----------------------------------------------------
@@ -201,6 +210,66 @@ class DecodeEngine:
                                                temperature, top_p)),
                         jnp.int32)
                     return nxt, h, cache
+            self._put_step(key, fn)
+        return self._step_cache[key]
+
+    # -- paged decode steps (attention families; see repro.serving.kvpool) ---
+    def _paged_greedy_step(self, head: SoftmaxHead):
+        """Composed (decode over pool pages + head.next) step, cached under
+        ``(head.step_key(), "greedy-paged")`` with the same LRU/meshing
+        discipline as ``_greedy_step``. Signature:
+        ``fn(params, tok, pk, pv, table, pos) -> (next, h, pk, pv)``."""
+        key = (head.step_key(), "greedy-paged")
+        if key not in self._step_cache:
+            if head.is_jittable:
+                def step(params, tok, pk, pv, table, pos):
+                    h, pool = self.model.decode_step_paged(
+                        params, tok, {"k": pk, "v": pv}, table, pos)
+                    return head.next(h), h, pool["k"], pool["v"]
+                if head.mesh is not None:
+                    fn = self._mesh_aware_jit(head, step, n_placed=4)
+                else:
+                    fn = jax.jit(step)
+            else:
+                def fn(params, tok, pk, pv, table, pos):
+                    h, pool = self._jit_decode_paged(params, tok, pk, pv,
+                                                     table, pos)
+                    nxt = jnp.asarray(np.asarray(head.next(np.asarray(h))),
+                                      jnp.int32)
+                    return nxt, h, pool["k"], pool["v"]
+            self._put_step(key, fn)
+        else:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
+        return self._step_cache[key]
+
+    def _paged_sample_step(self, head: SoftmaxHead, temperature: float,
+                           top_p: float):
+        """Sampled twin of ``_paged_greedy_step``; key carries the sampling
+        statics like ``_sample_step``'s."""
+        key = (head.step_key(), "sample-paged", float(temperature),
+               float(top_p))
+        if key in self._step_cache:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
+        if key not in self._step_cache:
+            if head.is_jittable:
+                def step(params, rkey, tok, pk, pv, table, pos):
+                    h, pool = self.model.decode_step_paged(
+                        params, tok, {"k": pk, "v": pv}, table, pos)
+                    return (head.sample(rkey, h, temperature, top_p), h,
+                            pool["k"], pool["v"])
+                if head.mesh is not None:
+                    fn = self._mesh_aware_jit(head, step, n_placed=5)
+                else:
+                    fn = jax.jit(step)
+            else:
+                def fn(params, rkey, tok, pk, pv, table, pos):
+                    h, pool = self._jit_decode_paged(params, tok, pk, pv,
+                                                     table, pos)
+                    nxt = jnp.asarray(
+                        np.asarray(head.sample(rkey, np.asarray(h),
+                                               temperature, top_p)),
+                        jnp.int32)
+                    return nxt, h, pool["k"], pool["v"]
             self._put_step(key, fn)
         return self._step_cache[key]
 
@@ -335,6 +404,26 @@ class DecodeEngine:
             name = getattr(hd, "name", "custom")
         return DecodeStream(self, hd, width, temperature=temperature,
                             top_p=top_p, seed=seed, head_name=name)
+
+    def open_paged_stream(self, pool, head: Optional[HeadLike] = None,
+                          width: int = 4,
+                          temperature: Optional[float] = None,
+                          top_p: float = 1.0, seed: int = 0):
+        """Open a continuous decode stream backed by a ``PagePool`` instead
+        of a private contiguous cache: per-slot KV (or logical LSTM) pages
+        with shared-prefix radix reuse and copy-on-write. Same contract as
+        ``open_stream`` — greedy tokens stay bit-identical and attention
+        streams add at most one paged executable per (head, kind, width);
+        LSTM streams reuse the dense steps outright. See
+        ``repro.serving.kvpool.PagedDecodeStream``."""
+        from repro.serving.kvpool.stream import PagedDecodeStream
+        name = head if isinstance(head, str) else None
+        hd = self.resolve_head(head)
+        if name is None:
+            name = getattr(hd, "name", "custom")
+        return PagedDecodeStream(self, hd, width, pool,
+                                 temperature=temperature, top_p=top_p,
+                                 seed=seed, head_name=name)
 
     # -- beam search (batch of 1 prompt, beam B_w) ---------------------------
     def beam_search(self, prompt: np.ndarray, beam: int, max_new: int,

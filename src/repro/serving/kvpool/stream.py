@@ -1,0 +1,348 @@
+"""Paged continuous-batching decode stream: page tables instead of padding.
+
+``PagedDecodeStream`` is ``DecodeStream``'s drop-in sibling (same
+``join``/``step``/``evict``/``pop_finished`` surface, same fixed width and
+compile discipline) with per-stream contiguous caches replaced by a chain
+of pool pages per slot:
+
+  * ATTENTION families (dense/moe): K/V rows live in the engine-wide
+    ``PagedKVStore``; each slot owns a page chain and the batched step runs
+    ``decode_step_paged`` over (pool tensors, page table, positions). The
+    gathered paged view has the dense cache's exact shape (``page_size``
+    divides ``max_len``), identical values at every unmasked position, and
+    the identical keep-mask — greedy tokens are bit-identical to the
+    contiguous path. Prefix reuse is STORAGE sharing: fully-covered prompt
+    pages are shared by reference; the join still prefills solo (the
+    first-token bit-identity guarantee), writing only its private pages.
+
+  * LSTM family (the paper's architecture): decode carries no per-token
+    KV, so pages are LOGICAL accounting (uniform admission / telemetry /
+    pressure semantics) and the radix cache's node payloads are recurrent
+    state snapshots. A prefix hit is a true COMPUTE skip: prefill resumes
+    from the deepest snapshot and runs only the suffix, bit-exactly (a
+    restarted scan is the same cell sequence), chunked at page boundaries
+    so every new node gets its snapshot.
+
+Sharing is copy-on-write: a slot's first write into a page with other
+holders (a cache-pinned prompt tail, a sibling slot's shared prefix)
+re-allocates it privately — physically copied for attention families,
+pure accounting for LSTM — before the batched step runs, so the jitted
+step only ever scatter-writes sole-owner pages (or the trash page, for
+idle rows).
+
+Slots grow page-by-page on demand between steps; ``PoolExhausted``
+propagates to the scheduler as the pool-pressure signal (nothing is
+consumed or advanced when it fires, so the tick can simply retry after
+eviction/preemption frees pages).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import _splice_cache, _StreamSlot
+from repro.serving.kvpool.pool import PagePool, PoolExhausted
+from repro.serving.request import ServeRequest
+
+
+class PagedDecodeStream:
+    """Fixed-width continuous decode over pool pages. See module docstring;
+    ``DecodeStream`` documents the shared join/step/evict contract."""
+
+    def __init__(self, engine, head, width: int, pool: PagePool,
+                 temperature: Optional[float] = None, top_p: float = 1.0,
+                 seed: int = 0, head_name: str = "custom"):
+        if width < 1:
+            raise ValueError(f"stream width must be >= 1: {width}")
+        pool.bind(engine)
+        self.engine = engine
+        self.head = engine.resolve_head(head)
+        self.head_name = head_name
+        self.width = int(width)
+        self.pool = pool
+        self.temperature = temperature
+        self.top_p = float(top_p)
+        self.seed = int(seed)
+        self.sampled = temperature is not None
+        if self.sampled:
+            self._key = jax.random.key(self.seed)
+        self.family = engine.model.cfg.family
+        self.max_pages = engine.max_len // pool.page_size
+        self._repl = None
+        if self.head.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._repl = NamedSharding(self.head.mesh, PartitionSpec())
+        if self.family == "lstm":
+            self.cache = engine.model.init_cache(self.width, engine.max_len,
+                                                 dtype=engine.cache_dtype)
+            if self._repl is not None:
+                self.cache = jax.device_put(self.cache, self._repl)
+            self.table = None
+        else:
+            # per-slot sequence-page -> pool-page map; 0 = trash page, so
+            # idle rows gather junk that their mask/discard guarantees
+            # never surfaces (see attn_decode_paged)
+            self.table = np.zeros((self.width, self.max_pages), np.int32)
+            if self._repl is not None and pool.store is not None:
+                pool.store.place(self._repl)
+        self.tok = np.zeros((self.width,), np.int32)
+        self.pos = np.zeros((self.width,), np.int32)
+        self.slots: List[Optional[_StreamSlot]] = [None] * self.width
+        self._pages: List[List[int]] = [[] for _ in range(self.width)]
+        self._finished: List[tuple] = []
+
+    # -- capacity (DecodeStream contract) ------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def free_slots(self) -> int:
+        return self.width - self.n_active
+
+    @property
+    def idle(self) -> bool:
+        return self.n_active == 0 and not self._finished
+
+    @property
+    def pages_held(self) -> int:
+        return sum(len(c) for c in self._pages)
+
+    def occupied(self) -> List[tuple]:
+        return [(i, s.tag) for i, s in enumerate(self.slots) if s is not None]
+
+    def _first_free(self) -> int:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        raise RuntimeError("PagedDecodeStream is full — check free_slots")
+
+    def _first_token(self, h_last) -> int:
+        hd = self.head
+        h_in = h_last if hd.is_jittable else np.asarray(h_last)
+        if self.sampled:
+            self._key, k0 = jax.random.split(self._key)
+            first = hd.sample(k0, h_in, self.temperature, self.top_p)
+        else:
+            first = hd.next(h_in)
+        return int(np.asarray(first)[0])
+
+    # -- join -----------------------------------------------------------------
+    def join(self, request: ServeRequest, tag: object = None) -> int:
+        """Admit one request: radix-match its prompt, share/COW/allocate its
+        page chain, prefill (resumed for LSTM, solo for attention), splice.
+        Raises ``PoolExhausted`` — with every page reference this join took
+        rolled back — when the pool cannot back the prompt."""
+        eng = self.engine
+        Tp = int(request.prompt.shape[0])
+        if Tp + request.max_new > eng.max_len:
+            raise ValueError(
+                f"request needs {Tp + request.max_new} cache slots, stream "
+                f"max_len is {eng.max_len}")
+        slot = self._first_free()
+        toks = [int(t) for t in request.prompt]
+        match = self.pool.radix.match(toks)
+        held: List[int] = []                      # page refs this join owns
+        try:
+            if self.family == "lstm":
+                first = self._join_lstm(slot, request, toks, match, held)
+            else:
+                first = self._join_attn(request, toks, match, held)
+        except PoolExhausted:
+            for pg in held:
+                self.pool.release(pg)
+            raise
+        self._pages[slot] = held
+        if self.table is not None:
+            self.table[slot, :] = 0
+            self.table[slot, :len(held)] = held
+        self.tok[slot] = first
+        self.pos[slot] = Tp
+        entry = _StreamSlot(tag=tag, request=request, tokens=[first],
+                            remaining=request.max_new - 1)
+        if entry.remaining == 0:
+            self._finished.append(
+                (entry.tag, entry.request, np.asarray(entry.tokens, np.int32)))
+            self._release_chain(slot)
+        else:
+            self.slots[slot] = entry
+        return slot
+
+    def _join_lstm(self, slot, request, toks, match, held) -> int:
+        """Resume prefill from the deepest cached snapshot; chunk the
+        suffix at page boundaries, snapshotting each, so the whole prompt
+        inserts as radix nodes. Returns the first token."""
+        eng, pool = self.engine, self.pool
+        P, Tp = pool.page_size, len(toks)
+        t = match.n_full                      # snapshot exists exactly here
+        for pg, _ in match.chain:
+            held.append(pool.retain(pg))
+        cache1 = {"lstm": match.payload} if match.payload is not None else \
+            eng.model.init_cache(1, eng.max_len, dtype=eng.cache_dtype)
+        snaps, h_last, i = [], None, t
+        prompt = np.asarray(request.prompt)
+        while i < Tp:
+            n = min(P - (i % P), Tp - i)      # realign to the page grid
+            h, cache1 = eng._jit_resume_prefill(
+                eng.params, {"tokens": jnp.asarray(prompt[None, i:i + n])},
+                cache1)
+            i += n
+            snaps.append((i, cache1["lstm"]))
+            h_last = h[:, -1]
+        if h_last is None:
+            # whole prompt cached: the top layer's h AT the last prompt
+            # token is the snapshot's own h — no forward pass needed at all
+            h_last = cache1["lstm"][-1]["h"]
+        first = self._first_token(h_last)
+        solo = cache1 if self._repl is None \
+            else jax.device_put(cache1, self._repl)
+        self.cache = _splice_cache(self.cache, solo, slot, eng.model.cfg)
+        # page chain: a partially-covered grid slot being EXTENDED must go
+        # private now (logical COW — its node's snapshot stops at t, ours
+        # will stop deeper); fresh pages back the remaining grid slots
+        n_prompt = (Tp + P - 1) // P
+        if t < Tp and t % P:
+            # in-place swap: if cow's alloc raises, held[-1] still names the
+            # shared ref so join's rollback releases it — no leak either way
+            held[-1] = pool.cow(held[-1])
+        while len(held) < n_prompt:
+            held.append(pool.alloc())
+        payloads: List[object] = [None] * n_prompt
+        for end, state in snaps:
+            payloads[(end - 1) // P] = state
+        pool.radix.insert(toks, held[:n_prompt], payloads)
+        pool.radix.record(t, Tp)
+        return first
+
+    def _join_attn(self, request, toks, match, held) -> int:
+        """Solo full prefill (first-token bit-identity), storage-shared
+        full prefix pages, private pages scatter-written for the rest.
+        Returns the first token."""
+        eng, pool = self.engine, self.pool
+        P, Tp = pool.page_size, len(toks)
+        n_prompt = (Tp + P - 1) // P
+        # share only FULLY-covered grid slots; a partial slot is rewritten
+        # from our own prefill on a private page (counted as a COW when it
+        # displaces a matched partial node's page)
+        for pg, nv in match.chain:
+            if nv == P:
+                held.append(pool.retain(pg))
+        j0 = len(held)
+        if match.chain and match.chain[-1][1] < P:
+            # displace the matched partial node's page with a private one
+            # (two steps so a cow failure leaves the retained ref in held
+            # for join's rollback)
+            held.append(pool.retain(match.chain[-1][0]))
+            held[-1] = pool.cow(held[-1])
+        cache1 = eng.model.init_cache(1, eng.max_len, dtype=eng.cache_dtype)
+        h, cache1 = eng._jit_prefill(
+            eng.params, {"tokens": jnp.asarray(np.asarray(request.prompt)[None])},
+            cache1)
+        first = self._first_token(h[:, -1])
+        while len(held) < n_prompt:
+            held.append(pool.alloc())
+        if self._repl is not None:
+            cache1 = jax.device_put(cache1, self._repl)
+        if j0 < n_prompt:
+            pool.store.write_prompt(held[:n_prompt], cache1["attn"],
+                                    first_page=j0)
+        pool.radix.insert(toks, held[:n_prompt])
+        pool.radix.record(j0 * P, Tp)
+        return first
+
+    # -- step -----------------------------------------------------------------
+    def _ensure_pages(self, idx) -> None:
+        """Every active row must own a WRITABLE page at its write position
+        before the batched step scatters into the pool: grow chains page-by
+        -page, COW pages with other holders. Raises ``PoolExhausted`` with
+        nothing consumed (completed allocations stay in their chains and
+        are reused on retry)."""
+        P = self.pool.page_size
+        for i in idx:
+            j = int(self.pos[i]) // P
+            chain = self._pages[i]
+            if j == len(chain):
+                chain.append(self.pool.alloc())
+            else:
+                chain[j] = self.pool.ensure_writable(chain[j])
+            if self.table is not None:
+                self.table[i, j] = chain[j]
+
+    def step(self) -> List[tuple]:
+        """One batched decode tick; same contract as ``DecodeStream.step``.
+        May raise ``PoolExhausted`` BEFORE any state advances — the
+        scheduler frees pages (cache eviction / preemption) and re-ticks."""
+        idx = [i for i, s in enumerate(self.slots) if s is not None]
+        if idx:
+            self._ensure_pages(idx)
+        out = self._finished
+        self._finished = []
+        if not idx:
+            return out
+        eng = self.engine
+        tok = jnp.asarray(self.tok)
+        pos = jnp.asarray(self.pos)
+        if self.family == "lstm":
+            # the SAME cached dense step DecodeStream uses — the paged LSTM
+            # path adds zero step executables by construction
+            if self.sampled:
+                fn = eng._sample_step(self.head, self.temperature, self.top_p)
+                self._key, ki = jax.random.split(self._key)
+                nxt, _, self.cache = fn(eng.params, ki, tok, self.cache, pos)
+            else:
+                fn = eng._greedy_step(self.head)
+                nxt, _, self.cache = fn(eng.params, tok, self.cache, pos)
+        else:
+            store = self.pool.store
+            table = jnp.asarray(self.table)
+            if self.sampled:
+                fn = eng._paged_sample_step(self.head, self.temperature,
+                                            self.top_p)
+                self._key, ki = jax.random.split(self._key)
+                nxt, _, store.k, store.v = fn(eng.params, ki, tok, store.k,
+                                              store.v, table, pos)
+            else:
+                fn = eng._paged_greedy_step(self.head)
+                nxt, _, store.k, store.v = fn(eng.params, tok, store.k,
+                                              store.v, table, pos)
+        nxt = np.asarray(nxt)
+        for i in idx:
+            s = self.slots[i]
+            t = int(nxt[i])
+            s.tokens.append(t)
+            s.remaining -= 1
+            self.tok[i] = t
+            self.pos[i] += 1
+            if s.remaining == 0:
+                out.append((s.tag, s.request, np.asarray(s.tokens, np.int32)))
+                self.slots[i] = None
+                self._release_chain(i)
+        return out
+
+    def pop_finished(self) -> List[tuple]:
+        out = self._finished
+        self._finished = []
+        return out
+
+    # -- evict / release -------------------------------------------------------
+    def _release_chain(self, slot: int) -> None:
+        for pg in self._pages[slot]:
+            self.pool.release(pg)
+        self._pages[slot] = []
+        if self.table is not None:
+            self.table[slot, :] = 0
+        self.pos[slot] = 0               # park: trash-page writes, discarded
+        self.tok[slot] = 0
+
+    def evict(self, slot: int) -> tuple:
+        """Preemption hook: retire a slot, RELEASING its page chain (shared
+        prefix pages just drop one holder; sole-owner pages free)."""
+        s = self.slots[slot]
+        if s is None:
+            raise ValueError(f"slot {slot} is not occupied")
+        self.slots[slot] = None
+        self._release_chain(slot)
+        return (s.tag, s.request, np.asarray(s.tokens, np.int32))

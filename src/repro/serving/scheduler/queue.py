@@ -63,6 +63,10 @@ class QueuedRequest:
     deadline: float
     cost: float = 0.0
     placed_at: Optional[float] = None
+    # marginal KV pages this request will allocate beyond shared-prefix
+    # pages already resident (paged schedulers price admission with this;
+    # 0 under the non-paged path)
+    pages: int = 0
 
     @property
     def tier(self) -> str:
@@ -121,10 +125,20 @@ class RequestQueue:
 
 @dataclass
 class SchedulerLoad:
-    """What the scheduler is already committed to, as admission sees it."""
+    """What the scheduler is already committed to, as admission sees it.
+
+    The ``pages_*`` fields exist only under a paged scheduler
+    (``ContinuousScheduler(kv_pool=...)``): ``pages_free is None`` means no
+    pool is attached, and page-aware policies must not reject on memory.
+    ``request_pages`` is THIS submission's marginal page demand (prompt +
+    max_new pages minus shared-prefix pages already resident)."""
     flops_in_flight: float = 0.0     # per-step flops of queued + running work
     queued: int = 0                  # admitted requests not yet in a slot
     active: int = 0                  # occupied decode slots
+    pages_free: Optional[int] = None   # pool pages on the free list
+    pages_evictable: int = 0           # cache-held pages reclaimable under pressure
+    pages_queued: int = 0              # marginal pages of admitted-unplaced work
+    request_pages: int = 0             # marginal pages of the request being admitted
 
 
 @dataclass
@@ -221,6 +235,21 @@ class BudgetAdmission(AdmissionPolicy):
             return AdmissionDecision(
                 "reject", reason=f"queue full: {load.queued} waiting >= "
                                  f"limit {self.queue_limit}")
+        # pool pressure first: KV pages are head-independent, so when the
+        # pool (free + cache-reclaimable, net of already-queued demand)
+        # cannot back this request's marginal pages, no downgrade helps
+        if load.pages_free is not None and load.request_pages > 0:
+            headroom = (load.pages_free + load.pages_evictable
+                        - load.pages_queued)
+            if load.request_pages > headroom:
+                return AdmissionDecision(
+                    "reject",
+                    reason=f"pool exhausted: request needs "
+                           f"{load.request_pages} marginal page(s), "
+                           f"{max(headroom, 0)} reclaimable "
+                           f"({load.pages_free} free + "
+                           f"{load.pages_evictable} evictable - "
+                           f"{load.pages_queued} queued)")
         budget_left = math.inf if self.flops_budget is None else \
             self.flops_budget - load.flops_in_flight
         meta = catalog.get(head)

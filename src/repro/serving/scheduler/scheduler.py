@@ -33,6 +33,7 @@ from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.serving.engine import DecodeEngine, DecodeStream
+from repro.serving.kvpool.pool import PoolExhausted
 from repro.serving.request import ServeRequest, ServeResult
 from repro.serving.scheduler.queue import (AcceptAll, AdmissionPolicy,
                                            AdmissionRejected, QueuedRequest,
@@ -56,16 +57,30 @@ class ContinuousScheduler:
     ``clock``       injectable monotonic clock for arrival/deadline/latency
                     bookkeeping (tests pass a fake; throughput telemetry
                     always uses the real wall clock).
+    ``kv_pool``     optional ``repro.serving.kvpool.PagePool``: streams
+                    become ``PagedDecodeStream``s sharing the pool's pages
+                    and shared-prefix radix cache; admission prices each
+                    request by its MARGINAL pages (prompt + max_new pages
+                    minus radix-resident prefix pages); ``PoolExhausted``
+                    at placement or step becomes a first-class pressure
+                    signal — the radix cache reclaims LRU prefixes first,
+                    then stage 3 preempts expendable lower-tier work, and
+                    after two consecutive stalled ticks the lowest-tier
+                    running slot is force-evicted so the pool can never
+                    livelock a full stream set.
     """
 
     def __init__(self, engine: DecodeEngine, policy=None,
                  admission: Optional[AdmissionPolicy] = None,
                  max_slots: int = 4, max_streams: int = 8,
                  deadlines: Optional[Dict[str, float]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 kv_pool=None):
         if max_slots < 1 or max_streams < 1:
             raise ValueError("max_slots and max_streams must be >= 1")
         self.engine = engine
+        self.kv_pool = kv_pool
+        self._pool_stalled_ticks = 0    # consecutive ticks blocked on pages
         self.policy = policy
         self.admission = admission if admission is not None else AcceptAll()
         self.max_slots = int(max_slots)
@@ -102,10 +117,30 @@ class ContinuousScheduler:
 
     def _load(self) -> SchedulerLoad:
         running = sum(qr.cost for qr in self._inflight.values())
-        return SchedulerLoad(
+        load = SchedulerLoad(
             flops_in_flight=self.queue.flops_pending + running,
             queued=len(self.queue),
             active=sum(s.n_active for s in self._streams.values()))
+        pool = self.kv_pool
+        if pool is not None:
+            load.pages_free = pool.pages_free
+            load.pages_evictable = pool.radix.evictable_pages() \
+                if pool.radix is not None else 0
+            load.pages_queued = sum(qr.pages for qr in self.queue)
+        return load
+
+    def _marginal_pages(self, request: ServeRequest) -> int:
+        """Pages this request will newly allocate: its full footprint
+        (prompt + decode budget) minus fully-shared prefix pages already
+        resident in the radix cache (a peek — no LRU side effects)."""
+        pool = self.kv_pool
+        P = pool.page_size
+        total = int(request.prompt.shape[0]) + int(request.max_new)
+        shared = 0
+        if pool.radix is not None:
+            m = pool.radix.match([int(t) for t in request.prompt], peek=True)
+            shared = sum(1 for _, nv in m.chain if nv == P)
+        return max(0, (total + P - 1) // P - shared)
 
     # -- submission (admission happens HERE, against current load) -----------
     def submit(self, request: ServeRequest) -> int:
@@ -134,7 +169,10 @@ class ContinuousScheduler:
         catalog = {n: self._catalog[n] for n in names if n in self._catalog}
         if routed is None:
             catalog[name] = self.engine.head.describe()
-        decision = self.admission.admit(request, name, catalog, self._load())
+        load = self._load()
+        if self.kv_pool is not None:
+            load.request_pages = self._marginal_pages(request)
+        decision = self.admission.admit(request, name, catalog, load)
         if decision.action == "reject":
             self._results[rid] = AdmissionRejected(
                 request=request, reason=decision.reason, stage="admission")
@@ -148,6 +186,7 @@ class ContinuousScheduler:
         qr = self.queue.push(request, head,
                              cost=head_flops(catalog, decision.head or name),
                              req_id=rid)
+        qr.pages = load.request_pages
         self.stats.admitted += 1
         self.stats.observe_queue(len(self.queue))
         return rid
@@ -175,9 +214,14 @@ class ContinuousScheduler:
             else:
                 return None
         req = qr.request
-        stream = self.engine.open_stream(
-            head=qr.head, width=self.max_slots, temperature=req.temperature,
-            top_p=req.top_p, seed=req.seed)
+        if self.kv_pool is not None:
+            stream = self.engine.open_paged_stream(
+                self.kv_pool, head=qr.head, width=self.max_slots,
+                temperature=req.temperature, top_p=req.top_p, seed=req.seed)
+        else:
+            stream = self.engine.open_stream(
+                head=qr.head, width=self.max_slots,
+                temperature=req.temperature, top_p=req.top_p, seed=req.seed)
         self._streams[sig] = stream
         return stream
 
@@ -187,6 +231,7 @@ class ContinuousScheduler:
         a terminal state (completed or preempted) this tick."""
         self.stats.ticks += 1
         terminal = 0
+        pool_blocked = False    # a PoolExhausted fired somewhere this tick
         # 1. place waiting requests — priority-ordered, FIFO within a tier.
         #    Plain FIFO would hand a preemption-freed slot to the next
         #    lower-tier request in line, which stage 3 would immediately
@@ -199,7 +244,24 @@ class ContinuousScheduler:
             if stream is None:
                 continue
             t0 = time.perf_counter()
-            stream.join(qr.request, tag=qr)
+            try:
+                stream.join(qr.request, tag=qr)
+            except PoolExhausted as e:
+                # join rolled back every page it took; the request stays
+                # queued and stage 3 applies pool pressure. With nothing
+                # in flight there is nothing left to preempt and the radix
+                # cache already reclaimed all it could inside alloc — the
+                # request can NEVER place, so it terminates typed instead
+                # of stalling drain()
+                pool_blocked = True
+                if not self._inflight:
+                    self.queue.remove(qr)
+                    self._results[qr.id] = AdmissionRejected(
+                        request=qr.request, stage="placement",
+                        head=stream.head_name, reason=str(e))
+                    self.stats.preempted += 1
+                    terminal += 1
+                continue
             dt = time.perf_counter() - t0
             self.queue.remove(qr)
             now = self.clock()
@@ -212,9 +274,17 @@ class ContinuousScheduler:
             if stream.n_active:
                 n_tok = stream.n_active
                 t0 = time.perf_counter()
-                finished = stream.step()
-                self.stats.record_decode(stream.head_name, n_tok,
-                                         time.perf_counter() - t0)
+                try:
+                    finished = stream.step()
+                except PoolExhausted:
+                    # nothing advanced or was consumed; completions from
+                    # earlier joins still surface, stage 3 frees pages,
+                    # and the next tick retries the identical step
+                    pool_blocked = True
+                    finished = stream.pop_finished()
+                else:
+                    self.stats.record_decode(stream.head_name, n_tok,
+                                             time.perf_counter() - t0)
             else:
                 finished = stream.pop_finished()
             for qr, request, tokens in finished:
@@ -275,6 +345,49 @@ class ContinuousScheduler:
             terminal += 1
             if own is None:
                 lane_freed_for.add(sig)
+        # 3b. POOL pressure: a PoolExhausted this tick means page capacity —
+        #     not slots — is the bottleneck, and evicting ANY running slot
+        #     helps (its whole page chain releases). Victim choice: prefer
+        #     expendable work (past deadline, or deadline-less batch),
+        #     lowest tier first; when the tick's waiters have a tier,
+        #     victims must sit strictly below the most urgent one. Two
+        #     consecutive stalled ticks ESCALATE: the deadline and tier
+        #     guards drop, and the globally lowest-tier slot is evicted —
+        #     pages must come from somewhere or the server livelocks.
+        if pool_blocked:
+            self._pool_stalled_ticks += 1
+            force = self._pool_stalled_ticks >= 2
+            waiter_pri = min((q.priority for q in self.queue), default=None)
+            best = None                  # (not expendable, -priority) min-key
+            for cand in self._streams.values():
+                for slot, tag in cand.occupied():
+                    expendable = now > tag.deadline or math.isinf(tag.deadline)
+                    if not expendable and not force:
+                        continue
+                    if waiter_pri is not None and not force \
+                            and tag.priority <= waiter_pri:
+                        continue
+                    key = (not expendable, -tag.priority)
+                    if best is None or key < best[0]:
+                        best = (key, slot, tag, cand)
+            if best is not None:
+                _, slot, tag, victim_stream = best
+                _, request, partial = victim_stream.evict(slot)
+                self._results[tag.id] = AdmissionRejected(
+                    request=request, stage="preempt",
+                    head=victim_stream.head_name, tokens=partial,
+                    reason=f"pool exhausted: {tag.tier} work evicted to "
+                           f"free its KV pages (stalled "
+                           f"{self._pool_stalled_ticks} tick(s))")
+                self._inflight.pop(tag.id, None)
+                self.stats.preempted += 1
+                terminal += 1
+                self._pool_stalled_ticks = 0
+        else:
+            self._pool_stalled_ticks = 0
+        if self.kv_pool is not None:
+            self.stats.observe_pool(self.kv_pool.telemetry(),
+                                    stalled=pool_blocked)
         self.stats.observe_queue(len(self.queue))
         return terminal
 

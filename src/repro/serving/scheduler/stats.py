@@ -14,7 +14,7 @@ fiction.
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.utils.timing import LatencyTracker
 
@@ -47,6 +47,13 @@ class ServerStats:
         # name -> {"requests", "tokens", "decode_s"}; tokens/s derived in
         # snapshot() so the accumulators stay mergeable
         self.per_head: Dict[str, Dict[str, float]] = {}
+        # paged KV pool utilization (None until a paged scheduler feeds it):
+        # last PagePool.telemetry() snapshot + per-tick COW deltas
+        self.pool: Optional[Dict[str, object]] = None
+        self.pool_stalled_ticks = 0      # ticks a PoolExhausted blocked work
+        self._pool_cow_seen = 0
+        self._pool_cow_ticks = 0
+        self._pool_cow_total = 0
 
     # -- update hooks (called by ContinuousScheduler) ------------------------
     def _head(self, name: str) -> Dict[str, float]:
@@ -74,6 +81,17 @@ class ServerStats:
     def observe_queue(self, depth: int) -> None:
         self.queue_depth = int(depth)
         self.max_queue_depth = max(self.max_queue_depth, self.queue_depth)
+
+    def observe_pool(self, telemetry: dict, stalled: bool = False) -> None:
+        """One tick's ``PagePool.telemetry()``: keeps the latest snapshot
+        and accumulates the per-tick COW rate (cumulative counter deltas)."""
+        cow = int(telemetry.get("cow_copies", 0))
+        self._pool_cow_total += max(0, cow - self._pool_cow_seen)
+        self._pool_cow_seen = cow
+        self._pool_cow_ticks += 1
+        self.pool = dict(telemetry)
+        if stalled:
+            self.pool_stalled_ticks += 1
 
     # -- reporting -----------------------------------------------------------
     @property
@@ -103,6 +121,13 @@ class ServerStats:
             "latency": self.latency.snapshot(),
             "queue_wait": self.queue_wait.snapshot(),
             "per_head": per_head,
+            "pool": None if self.pool is None else {
+                **self.pool,
+                "stalled_ticks": self.pool_stalled_ticks,
+                "cow_copies_per_tick": (
+                    self._pool_cow_total / self._pool_cow_ticks
+                    if self._pool_cow_ticks else 0.0),
+            },
         }
 
     def __repr__(self) -> str:     # pragma: no cover - debug aid

@@ -1,0 +1,398 @@
+"""Paged KV pool subsystem: allocator invariants, radix prefix cache,
+COW, paged-stream bit-parity, stale-KV masking, and scheduler pressure.
+
+The load-bearing guarantees pinned here:
+
+  * greedy tokens through a ``PagedDecodeStream`` are BIT-IDENTICAL to solo
+    ``engine.generate`` for the LSTM family (resume prefill from radix
+    snapshots), attention families (paged scatter/gather decode), and the
+    vocab-sharded head path — regardless of prefix sharing, COW, or page
+    reuse;
+  * freed pages full of stale (poisoned) KV rows never leak into another
+    request's decode — the paged attention mask zeroes them exactly;
+  * ``PoolExhausted`` is rollback-safe at join, non-consuming at step, and
+    surfaces through the scheduler as typed preemption/rejection.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (BudgetAdmission, ContinuousScheduler,
+                           DecodeEngine, PagePool, PoolExhausted,
+                           ServeRequest, ServeResult)
+from repro.serving.kvpool import RadixCache
+from repro.serving.scheduler import AdmissionRejected
+
+
+@pytest.fixture(scope="module")
+def lstm_engine():
+    cfg = get_config("ptb-small-lstm").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    return cfg, DecodeEngine(m, params, max_len=24)
+
+
+@pytest.fixture(scope="module")
+def dense_engine():
+    cfg = get_config("smollm-360m").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(1), dtype=jnp.float32)
+    return cfg, DecodeEngine(m, params, max_len=24)
+
+
+def _prefix_requests(cfg, n, template_len=10, suffix_len=3, max_new=5,
+                     seed=0):
+    rng = np.random.default_rng(seed)
+    tmpl = rng.integers(0, cfg.vocab_size, size=template_len)
+    return [ServeRequest(
+        prompt=np.concatenate(
+            [tmpl, rng.integers(0, cfg.vocab_size, size=suffix_len)]
+        ).astype(np.int32), max_new=max_new) for _ in range(n)]
+
+
+def _run_stream(stream, requests):
+    got, pending = {}, list(enumerate(requests))
+    while pending or stream.n_active or stream._finished:
+        while pending and stream.free_slots:
+            i, r = pending.pop(0)
+            stream.join(r, tag=i)
+        for tag, _, toks in stream.step():
+            got[tag] = toks
+    return got
+
+
+# -- PagePool unit ------------------------------------------------------------
+
+def test_pool_alloc_release_refcounts():
+    pool = PagePool(6, 4)
+    assert pool.pages_free == 5 and pool.pages_in_use == 0
+    a, b = pool.alloc(), pool.alloc()
+    assert a != 0 and b != 0 and a != b     # page 0 reserved (trash)
+    assert pool.pages_in_use == 2 and pool.writable(a)
+    pool.retain(a)
+    assert pool.ref(a) == 2 and not pool.writable(a)
+    pool.release(a)
+    assert pool.ref(a) == 1
+    pool.release(a)
+    assert pool.ref(a) == 0 and pool.pages_free == 4
+    with pytest.raises(ValueError, match="double free"):
+        pool.release(a)
+    with pytest.raises(ValueError):
+        pool.retain(a)                      # non-live
+    pool.release(b)
+    assert pool.pages_in_use == 0 and pool.peak_in_use == 2
+
+
+def test_pool_cow_and_ensure_writable():
+    pool = PagePool(6, 4)
+    a = pool.alloc()
+    assert pool.ensure_writable(a) == a     # sole holder: no copy
+    pool.retain(a)
+    c = pool.ensure_writable(a)
+    assert c != a and pool.ref(a) == 1 and pool.ref(c) == 1
+    assert pool.cow_copies == 1
+
+
+def test_pool_exhaustion_typed():
+    pool = PagePool(3, 4)                   # 2 allocatable
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted) as ei:
+        pool.alloc()
+    assert ei.value.needed == 1 and ei.value.free == 0 and ei.value.total == 2
+    assert "exhausted" in str(ei.value)
+
+
+def test_pool_validation():
+    with pytest.raises(ValueError):
+        PagePool(1, 4)                      # page 0 alone is not a pool
+    with pytest.raises(ValueError):
+        PagePool(4, 0)
+
+
+# -- RadixCache unit ----------------------------------------------------------
+
+def test_radix_insert_match_roundtrip():
+    pool = PagePool(32, 4)
+    radix = RadixCache(pool)
+    toks = list(range(10))                  # 2 full chunks + 1 partial
+    pages = [pool.alloc() for _ in range(3)]
+    created = radix.insert(toks, pages, payloads=["s0", "s1", "s2"])
+    assert created == 3 and radix.nodes == 3
+    for pg in pages:                        # cache pinned each page
+        assert pool.ref(pg) == 2
+    m = radix.match(toks)
+    assert m.n_full == 10 and m.n_tokens == 10
+    assert m.payload == "s2"
+    assert [n for _, n in m.chain] == [4, 4, 2]
+    # partial hit inside the tail node
+    m2 = radix.match(toks[:9])
+    assert m2.n_full == 8 and m2.n_tokens == 9 and m2.tail == (pages[2], 1)
+    # divergent suffix: full chunks still shared
+    m3 = radix.match(list(range(8)) + [99, 98])
+    assert m3.n_full == 8 and m3.payload == "s1"
+
+
+def test_radix_reclaim_skips_shared_pages():
+    pool = PagePool(32, 4)
+    radix = RadixCache(pool)
+    toks = list(range(8))
+    pages = [pool.alloc(), pool.alloc()]
+    radix.insert(toks, pages)
+    for pg in pages:                        # simulate the stream dropping out
+        pool.release(pg)
+    pool.retain(pages[1])                   # another stream still shares p1
+    freed = radix.reclaim(2)
+    # only the leaf whose page is sole-held by the cache can free; p1's node
+    # is also the remaining leaf's parent, so one LRU pass frees nothing
+    # until the shared holder lets go
+    assert freed == 0                       # leaf p1 is shared; p0 is inner
+    pool.release(pages[1])
+    assert radix.reclaim(2) == 2 and radix.nodes == 0
+    assert pool.pages_in_use == 0
+
+
+def test_radix_partials_lru_capped():
+    from repro.serving.kvpool.radix import MAX_PARTIALS
+    pool = PagePool(64, 4)
+    radix = RadixCache(pool)
+    for i in range(MAX_PARTIALS + 3):
+        pages = [pool.alloc()]
+        radix.insert([100 + i, 200 + i], pages)
+        pool.release(pages[0])
+    assert radix.nodes == MAX_PARTIALS
+    assert radix.evictions == 3
+
+
+def test_bind_requires_page_alignment(lstm_engine):
+    _, eng = lstm_engine
+    pool = PagePool(8, 7)                   # 7 does not divide max_len 24
+    with pytest.raises(ValueError, match="must divide"):
+        eng.open_paged_stream(pool)
+
+
+# -- paged stream bit-parity --------------------------------------------------
+
+def test_lstm_paged_stream_parity_and_hits(lstm_engine):
+    cfg, eng = lstm_engine
+    reqs = _prefix_requests(cfg, 6, max_new=5, seed=2)
+    pool = PagePool(64, 4)
+    stream = eng.open_paged_stream(pool, width=3)
+    got = _run_stream(stream, reqs)
+    for i, r in enumerate(reqs):
+        ref = eng.generate(r.prompt[None], r.max_new).tokens[0]
+        assert np.array_equal(got[i], ref), f"request {i} diverged"
+    # template is 10 tokens of 13 → later joins resume from snapshots
+    assert pool.radix.hit_rate > 0.3
+    assert pool.cow_copies > 0              # partial-tail extension COWs
+    # all stream chains released; only radix pins remain
+    assert stream.pages_held == 0
+    assert pool.pages_in_use == pool.radix.nodes
+    # LSTM paged streams reuse the DENSE greedy step — no paged step kinds
+    assert all(kind == "greedy" for _, kind in eng.compiled_step_counts())
+
+
+def test_lstm_mixed_prompt_lengths_parity(lstm_engine):
+    """Mixed-length prompts sharing partial prefixes: grid realignment,
+    COW of extended partial tails, and whole-prompt cache hits (a prompt
+    that IS a cached prefix decodes its first token with no forward pass)."""
+    cfg, eng = lstm_engine
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab_size, size=11).astype(np.int32)
+    reqs = [ServeRequest(prompt=base[:n], max_new=4)
+            for n in (11, 7, 11, 5, 9, 11)]
+    pool = PagePool(64, 4)
+    got = _run_stream(eng.open_paged_stream(pool, width=2), reqs)
+    for i, r in enumerate(reqs):
+        ref = eng.generate(r.prompt[None], r.max_new).tokens[0]
+        assert np.array_equal(got[i], ref), f"len {len(r.prompt)} diverged"
+
+
+def test_dense_paged_stream_parity(dense_engine):
+    cfg, eng = dense_engine
+    reqs = _prefix_requests(cfg, 4, template_len=8, suffix_len=4,
+                            max_new=4, seed=3)
+    pool = PagePool(64, 4)
+    got = _run_stream(eng.open_paged_stream(pool, width=2), reqs)
+    for i, r in enumerate(reqs):
+        ref = eng.generate(r.prompt[None], r.max_new).tokens[0]
+        assert np.array_equal(got[i], ref), f"request {i} diverged"
+    assert pool.radix.hit_rate > 0.3        # full prompt pages deduped
+    cts = eng.compiled_step_counts()
+    assert cts.get(("exact", "greedy-paged"), 0) >= 1
+
+
+def test_dense_stale_page_rows_never_leak(dense_engine):
+    """Satellite audit: POISON every pool page with large finite garbage,
+    then decode on freshly-allocated pages. The paged attention mask must
+    zero stale rows exactly (score −1e30 → exp underflows to 0.0), so
+    tokens stay bit-identical to the solo path. The pool's LIFO free list
+    maximizes reuse of just-freed (poisoned) pages."""
+    cfg, eng = dense_engine
+    pool = PagePool(16, 4)
+    stream = eng.open_paged_stream(pool, width=2)
+    # round 1 dirties pages; then drop the radix pins so pages free up
+    reqs1 = _prefix_requests(cfg, 2, template_len=8, suffix_len=4,
+                             max_new=4, seed=7)
+    _run_stream(stream, reqs1)
+    pool.radix.clear()
+    assert pool.pages_in_use == 0
+    # poison EVERY non-trash page with large-but-finite junk
+    pool.store.k = pool.store.k.at[:, 1:].set(1e3)
+    pool.store.v = pool.store.v.at[:, 1:].set(1e3)
+    reqs2 = _prefix_requests(cfg, 3, template_len=8, suffix_len=4,
+                             max_new=5, seed=11)
+    got = _run_stream(stream, reqs2)
+    for i, r in enumerate(reqs2):
+        ref = eng.generate(r.prompt[None], r.max_new).tokens[0]
+        assert np.array_equal(got[i], ref), \
+            f"stale KV rows leaked into request {i}"
+
+
+def test_join_rolls_back_on_exhaustion(lstm_engine):
+    cfg, eng = lstm_engine
+    pool = PagePool(3, 4)                   # 2 allocatable pages
+    stream = eng.open_paged_stream(pool, width=2)
+    rng = np.random.default_rng(9)
+    big = ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, size=14).astype(np.int32),
+        max_new=4)                          # needs 4 prompt pages
+    with pytest.raises(PoolExhausted):
+        stream.join(big)
+    assert pool.pages_in_use == 0           # every ref rolled back
+    assert stream.n_active == 0 and stream.pages_held == 0
+    # a request that fits still serves afterwards
+    small = ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
+        max_new=3)
+    got = _run_stream(stream, [small])
+    ref = eng.generate(small.prompt[None], small.max_new).tokens[0]
+    assert np.array_equal(got[0], ref)
+
+
+# -- sampled streams over pages ----------------------------------------------
+
+def test_lstm_paged_sampled_stream_matches_unpaged(lstm_engine):
+    """A sampled paged stream advances the identical PRNG chain as the
+    dense ``DecodeStream`` — same joins, same width, same draws."""
+    cfg, eng = lstm_engine
+    reqs = _prefix_requests(cfg, 3, max_new=4, seed=13)
+    for r in reqs:
+        r.temperature, r.seed = 0.8, 11
+    kw = dict(width=2, temperature=0.8, top_p=0.95, seed=11)
+    got_plain = _run_stream(eng.open_stream(**kw), reqs)
+    got_paged = _run_stream(
+        eng.open_paged_stream(PagePool(64, 4), **kw), reqs)
+    for i in range(len(reqs)):
+        assert np.array_equal(got_plain[i], got_paged[i])
+
+
+# -- scheduler integration ----------------------------------------------------
+
+def test_scheduler_paged_drain_parity(lstm_engine):
+    cfg, eng = lstm_engine
+    reqs = _prefix_requests(cfg, 6, max_new=5, seed=17)
+    pool = PagePool(64, 4)
+    sched = ContinuousScheduler(eng, max_slots=3, kv_pool=pool)
+    res = sched.serve(reqs)
+    assert all(isinstance(r, ServeResult) for r in res)
+    for r, req in zip(res, reqs):
+        ref = eng.generate(req.prompt[None], req.max_new).tokens[0]
+        assert np.array_equal(r.tokens, ref)
+    snap = sched.stats.snapshot()
+    assert snap["pool"] is not None
+    assert snap["pool"]["prefix"]["hit_rate"] > 0.3
+    assert snap["pool"]["pages_in_use"] == pool.pages_in_use
+
+
+def test_scheduler_pool_pressure_preempts(lstm_engine):
+    """A pool too small for concurrent requests serializes them through
+    typed preemption/placement results instead of stalling drain()."""
+    cfg, eng = lstm_engine
+    rng = np.random.default_rng(19)
+    reqs = [ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+        max_new=6, latency_tier="batch") for _ in range(3)]
+    pool = PagePool(6, 4)                   # 5 pages; each request needs 5
+    sched = ContinuousScheduler(eng, max_slots=2, kv_pool=pool)
+    res = sched.serve(reqs)                 # must terminate, not stall
+    assert len(res) == 3
+    assert any(isinstance(r, ServeResult) for r in res)
+    kinds = {type(r).__name__ for r in res}
+    assert "AdmissionRejected" in kinds     # pool pressure surfaced typed
+    assert sched.stats.pool_stalled_ticks > 0
+
+
+def test_admission_prices_marginal_pages(lstm_engine):
+    cfg, eng = lstm_engine
+    rng = np.random.default_rng(23)
+    pool = PagePool(4, 4)                   # 3 allocatable pages
+    sched = ContinuousScheduler(eng, admission=BudgetAdmission(),
+                                kv_pool=pool)
+    big = ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+        max_new=6)                          # ceil(18/4) = 5 marginal pages
+    res = sched.serve([big])
+    assert isinstance(res[0], AdmissionRejected)
+    assert res[0].stage == "admission" and "pool exhausted" in res[0].reason
+    # a fitting request is admitted and served
+    small = ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+        max_new=4)
+    res2 = sched.serve([small])              # results span BOTH serve calls
+    assert isinstance(res2[-1], ServeResult)
+
+
+def test_admission_discounts_resident_prefix(lstm_engine):
+    """Marginal-page pricing: a request whose prefix is radix-resident is
+    charged only its new pages — it fits a pool its cold twin would not."""
+    cfg, eng = lstm_engine
+    rng = np.random.default_rng(29)
+    tmpl = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    mk = lambda: ServeRequest(prompt=np.concatenate(
+        [tmpl, rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)]),
+        max_new=4)                          # 16 slots = 4 pages total
+    pool = PagePool(8, 4)                   # 7 allocatable
+    sched = ContinuousScheduler(eng, admission=BudgetAdmission(),
+                                kv_pool=pool)
+    first = sched.serve([mk()])             # primes radix: 2 full pages
+    assert isinstance(first[0], ServeResult)
+    load_pages = sched._marginal_pages(mk())
+    assert load_pages == 2                  # 4 total - 2 shared
+
+
+def test_scheduler_paged_zero_recompiles(lstm_engine):
+    """Warm paged serving adds no step executables: LSTM paged streams ride
+    the dense greedy step, so a second scheduler (same widths) compiles
+    nothing new."""
+    cfg, eng = lstm_engine
+    pool = PagePool(64, 4)
+    warm = _prefix_requests(cfg, 3, max_new=3, seed=31)
+    ContinuousScheduler(eng, max_slots=3, kv_pool=pool).serve(warm)
+    counts0 = eng.compiled_step_counts()
+    meas = _prefix_requests(cfg, 5, max_new=4, seed=37)
+    sched = ContinuousScheduler(eng, max_slots=3, kv_pool=pool)
+    res = sched.serve(meas)
+    assert all(isinstance(r, ServeResult) for r in res)
+    counts1 = eng.compiled_step_counts()
+    assert sum(counts1.values()) == sum(counts0.values()), (counts0, counts1)
+
+
+# -- multidevice: paged decode under a vocab-sharded head ---------------------
+
+@pytest.mark.multidevice
+def test_paged_stream_parity_sharded_head(lstm_engine, multidevice):
+    """The sharded-matrix acceptance case: paged streams through an
+    8-device vocab-sharded exact head stay bit-identical to solo
+    generate on the same head."""
+    cfg, eng = lstm_engine
+    reqs = _prefix_requests(cfg, 4, max_new=4, seed=41)
+    pool = PagePool(64, 4)
+    stream = eng.open_paged_stream(pool, head="exact-sharded", width=2)
+    got = _run_stream(stream, reqs)
+    for i, r in enumerate(reqs):
+        ref = eng.generate(r.prompt[None], r.max_new,
+                           head="exact-sharded").tokens[0]
+        assert np.array_equal(got[i], ref), f"request {i} diverged"

@@ -119,6 +119,74 @@ def test_rope_norm_preservation(B, T, H, seed):
                                rtol=1e-4)
 
 
+@given(st.integers(2, 12), st.integers(1, 8), st.data())
+@settings(**SETTINGS)
+def test_page_pool_refcount_invariants(num_pages, page_size, data):
+    """Random alloc/retain/release/cow/ensure_writable sequences against a
+    model of held references: no double free, no refcount leak, and
+    pages-in-use always equals the number of distinct live pages — the
+    allocator half of the paged-KV bit-identity story (satellite: paged
+    KV pool)."""
+    from repro.serving.kvpool.pool import TRASH_PAGE, PagePool, PoolExhausted
+
+    pool = PagePool(num_pages, page_size)
+    held = []                               # model: one entry per live ref
+    for _ in range(data.draw(st.integers(1, 60), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["alloc", "retain", "release", "cow", "ensure_writable"]),
+            label="op")
+        if op == "alloc":
+            try:
+                held.append(pool.alloc())
+            except PoolExhausted as e:
+                assert not pool.pages_free
+                assert e.needed == 1 and e.total == num_pages - 1
+        elif not held:
+            continue
+        else:
+            i = data.draw(st.integers(0, len(held) - 1), label="ref")
+            if op == "retain":
+                held.append(pool.retain(held[i]))
+            elif op == "release":
+                pool.release(held.pop(i))
+            elif op == "cow":
+                try:
+                    held[i] = pool.cow(held[i])
+                except PoolExhausted:
+                    assert not pool.pages_free
+            else:
+                old = held[i]
+                was_sole = held.count(old) == 1
+                try:
+                    held[i] = pool.ensure_writable(old)
+                except PoolExhausted:
+                    assert not pool.pages_free and not was_sole
+                else:
+                    # sole holder keeps its page; shared gets a private one
+                    assert (held[i] == old) == was_sole
+
+        # invariants after EVERY operation
+        from collections import Counter
+        model = Counter(held)
+        assert TRASH_PAGE not in model
+        assert pool.live_pages() == dict(model)      # exact refcounts
+        assert pool.pages_in_use == len(model)
+        assert pool.pages_free + pool.pages_in_use == num_pages - 1
+        assert pool.peak_in_use >= pool.pages_in_use
+        for pg in model:
+            assert pool.writable(pg) == (model[pg] == 1)
+
+    # teardown: releasing every model ref returns the pool to empty, and
+    # one further release of each page is a detected double free
+    seen = set(held)
+    for pg in held:
+        pool.release(pg)
+    assert pool.pages_in_use == 0 and pool.pages_free == num_pages - 1
+    for pg in seen:
+        with pytest.raises(ValueError, match="double free"):
+            pool.release(pg)
+
+
 @given(st.lists(st.sampled_from(["f32", "bf16", "s32", "pred"]), min_size=1,
                 max_size=3),
        st.lists(st.integers(1, 64), min_size=0, max_size=3))
