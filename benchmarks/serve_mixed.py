@@ -10,9 +10,11 @@ mixed traffic reuses each head's one compiled step).
     PYTHONPATH=src python benchmarks/serve_mixed.py              # full
     PYTHONPATH=src python benchmarks/serve_mixed.py --reduced    # CI smoke
 
-With more than one jax device (e.g. XLA_FLAGS=
---xla_force_host_platform_device_count=8) the standard tier rides
-"screened-sharded", exercising the mesh-aware step path under load.
+The standard tier rides the frequency-tiered "adaptive" head (unigram
+counts accumulated during the training loop); with more than one jax
+device (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8) it
+upgrades to "adaptive-sharded", exercising the mesh-aware step path with
+the rare-tail region vocab-sharded.
 
 Alongside the human-readable table the run merges a machine-readable
 section into ``BENCH_serving.json`` (per-head tokens/s, p50/p95 request
@@ -55,7 +57,12 @@ def build_engine(reduced: bool, seed: int):
                        remat="none", loss_chunk=None)
     step_fn = jax.jit(make_train_step(model, tcfg))
     opt = adamw_init(params)
+    # unigram token counts ride along with training — they parameterize the
+    # adaptive head's frequency tiers and its tier-weighted cost model
+    counts = np.zeros(vocab, np.int64)
     for batch in make_lm_batches(corpus, steps, 16, 64, seed=1):
+        counts += np.bincount(np.asarray(batch["tokens"]).ravel(),
+                              minlength=vocab)
         params, opt, _ = step_fn(
             params, opt, {k: jnp.asarray(v) for k, v in batch.items()})
     H, y = collect_contexts(
@@ -67,9 +74,10 @@ def build_engine(reduced: bool, seed: int):
                  L2SConfig(num_clusters=16 if reduced else 64,
                            budget=48 if reduced else 120,
                            outer_iters=1, sgd_steps=60))
-    return cfg, corpus, DecodeEngine(model, params, screen=st.screen,
-                                     max_len=16 + 64,
-                                     head_kwargs=dict(rho=min(16, d)))
+    return cfg, corpus, DecodeEngine(
+        model, params, screen=st.screen, max_len=16 + 64,
+        head_kwargs=dict(rho=min(16, d), counts=counts,
+                         shortlist=max(64, vocab // 8)))
 
 
 def main(argv=None):
@@ -87,9 +95,11 @@ def main(argv=None):
 
     cfg, corpus, engine = build_engine(args.reduced, args.seed)
 
-    # tier → head spread: >= 3 heads always; the standard tier upgrades to
-    # the vocab-sharded screened head whenever a mesh is available
-    standard = "screened-sharded" if jax.device_count() > 1 else "svd"
+    # tier → head spread: >= 3 heads always; the standard tier rides the
+    # frequency-tiered adaptive head (tail region vocab-sharded whenever a
+    # mesh is available), so mixed screened + adaptive traffic shares the
+    # engine's cached steps
+    standard = "adaptive-sharded" if jax.device_count() > 1 else "adaptive"
     policy = TierPolicy({"realtime": "screened", "standard": standard,
                          "batch": "exact"}, default="screened")
     tiers = ["realtime", "standard", "batch"]

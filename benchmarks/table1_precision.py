@@ -88,6 +88,16 @@ def run(k: int = 5):
         assert name in registered, f"{name} missing from head registry"
         report(label, heads.get(name, **head_context(W, b, **kw)))
 
+    # --- adaptive frequency-tiered head (trained-unigram tiers; the flops
+    #     column is the TIER-WEIGHTED expected cost — short-list + gates +
+    #     p_descend × expected tail width, see benchmarks/README.md). The
+    #     time column is jax per-query dispatch, not the numpy protocol:
+    #     compare it to the other rows via flops, not speedup. ---
+    ad = heads.get("adaptive", **head_context(W, b, counts=freq,
+                                              shortlist=800, n_tails=4))
+    report("adaptive-tiered", ad,
+           extra=f",p_descend={ad._lay.p_descend:.3f}")
+
     # --- vocab-sharded heads (multi-device only; flops are PER SHARD —
     #     see benchmarks/README.md for how to read them) ---
     if jax.device_count() > 1:
@@ -96,6 +106,13 @@ def run(k: int = 5):
             csv_row(f"table1/{name}", float("nan"),
                     f"shards={head.n_shards},"
                     f"flops_per_shard={head.flops_per_query:.0f}")
+        ads = heads.get("adaptive-sharded",
+                        **head_context(W, b, counts=freq, shortlist=800,
+                                       n_tails=4))
+        csv_row("table1/adaptive-sharded", float("nan"),
+                f"shards={ads.n_shards},"
+                f"flops_per_shard={ads.flops_per_query:.0f},"
+                f"p_descend={ads._lay.p_descend:.3f}")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,12 @@ Registered backends (see each class for the cost model):
                   the shard owning their vocab range
   screened-pallas L2S on the Pallas TPU kernels           O((r+L̄)·d)
   screened-cpu    L2S per-query numpy (paper timing)      O((r+L̄)·d)
+  adaptive        frequency-tiered adaptive softmax       O((F+C+p·T̄)·d)
+                  (short-list + lazily-gated rare tails,
+                  fused per-tier Pallas top-k)
+  adaptive-sharded adaptive with the rare-tail region     O((F+C+p·T̄/n)·d)
+                  vocab-range-sharded, short-list         per shard
+                  replicated on every shard
   svd             SVD-softmax preview + rerank            O(d·ρ + L·ρ + Ñ·d)
   shortlist       adaptive-softmax frequent shortlist     O((n_head+τ)·d)
   greedy-mips     budgeted per-dimension screening        O(B·d)
@@ -27,12 +33,14 @@ takes the construction context as kwargs (``W``, ``b``, ``screen``, ...) and
 tolerates extras — that single seam is how new approximation methods,
 kernels, and per-request policies plug into the engine and benchmarks."""
 from repro.heads.base import (NEG_INF, MissingScreenError, SoftmaxHead,
-                              sample_from_logits, screened_flops_per_query)
+                              sample_from_logits, screened_flops_per_query,
+                              tiered_flops_per_query)
 from repro.heads.registry import get, names, register
 from repro.heads.exact import ExactHead
 from repro.heads.screened import ScreenedHead
 from repro.heads.pallas import ScreenedPallasHead
 from repro.heads.sharded import ExactShardedHead, ScreenedShardedHead
+from repro.heads.adaptive import AdaptiveHead, AdaptiveShardedHead
 from repro.heads.adapters import (BaselineHead, GreedyMIPSHead, LSHHead,
                                   PCAHead, ScreenedNumpyHead, ShortlistHead,
                                   SVDHead)
@@ -52,6 +60,17 @@ register("screened-pallas",
          ScreenedPallasHead(W, b, screen, interpret=interpret, fused=fused))
 register("screened-cpu",
          lambda W, b, screen, **_: ScreenedNumpyHead(W, b, screen))
+register("adaptive",
+         lambda W, b, counts=None, shortlist=None, n_tails=4,
+         interpret=True, fused=True, **_:
+         AdaptiveHead(W, b, counts=counts, shortlist=shortlist,
+                      n_tails=n_tails, interpret=interpret, fused=fused))
+register("adaptive-sharded",
+         lambda W, b, counts=None, shortlist=None, n_tails=4, mesh=None,
+         n_shards=None, interpret=True, **_:
+         AdaptiveShardedHead(W, b, counts=counts, shortlist=shortlist,
+                             n_tails=n_tails, mesh=mesh, n_shards=n_shards,
+                             interpret=interpret))
 register("svd", lambda W, b, rho=16, n_top=None, **_:
          SVDHead(W, b, rho=rho, n_top=n_top))
 register("shortlist",

@@ -63,6 +63,33 @@ def screened_flops_per_query(screen, d: int) -> float:
     return float((screen.r + lbar) * d)
 
 
+def tiered_flops_per_query(short_words: int, n_gates: int, p_descend: float,
+                           expected_tail_words: float, d: int) -> float:
+    """Adaptive-softmax cost model (Grave et al.): every query pays the
+    short-list matmul plus the tail gates, O((F + C)·d); the tail cluster
+    matmul is paid only when the gate wins, so it enters in EXPECTATION
+    under the configured unigram distribution — ``p_descend`` is the
+    unigram mass beyond the short-list and ``expected_tail_words`` the
+    unigram-weighted mean tail-cluster width. One definition for both
+    adaptive heads so routing compares like against like."""
+    return float((short_words + n_gates +
+                  p_descend * expected_tail_words) * d)
+
+
+def tiered_bytes_per_query(short_words: int, n_gates: int, p_descend: float,
+                           expected_tail_words: float, d: int,
+                           writeback_floats: float = 0.0,
+                           itemsize: int = 4) -> float:
+    """HBM-traffic twin of ``tiered_flops_per_query``: short-list tiles and
+    gates stream once per query, tail tiles stream in expectation, and
+    ``writeback_floats`` intermediates are written back and re-read
+    (counted twice) — O(k) results for the fused per-tier kernel, the full
+    candidate row for the unfused escape hatch."""
+    return float(((short_words + n_gates +
+                   p_descend * expected_tail_words) * d +
+                  2.0 * writeback_floats) * itemsize)
+
+
 def screened_bytes_per_query(screen, d: int, writeback_floats: float = 0.0,
                              itemsize: int = 4) -> float:
     """Shared L2S HBM-traffic model for one decode step: the router and the

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.screening import (ScreenParams, assign_clusters,
                                   screened_logits, screened_topk)
-from repro.heads.base import (SoftmaxHead, require_screen,
+from repro.heads.base import (NEG_INF, SoftmaxHead, require_screen,
                               sample_from_logits, screened_bytes_per_query,
                               screened_flops_per_query)
 
@@ -33,7 +33,14 @@ def _topk_logprobs(W, b, screen, h, k):
     probability of other vocabularies ... 0"), then top-k."""
     cluster = assign_clusters(screen.v, h)
     logits, word_ids = screened_logits(W, b, screen, h, cluster)
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    logits = logits.astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    # −inf-safe empty-row convention (the fused kernel's contract): a row
+    # routed to a cluster with NO candidates is probability 0 everywhere —
+    # log_softmax's max-shift would otherwise hand the sentinel padding a
+    # fake uniform distribution
+    empty = jnp.all(logits <= NEG_INF / 2, axis=-1)
+    lp = jnp.where(empty[:, None], NEG_INF, lp)
     vals, pos = jax.lax.top_k(lp, k)
     ids = jnp.take_along_axis(word_ids, pos, axis=-1)
     return ids.astype(jnp.int32), vals

@@ -137,3 +137,22 @@ def screened_fused_sample_tpu(W_blocks, b_blocks, v, cand_blocks, h, key,
     ids, _, _ = fused_screened_topk(W_blocks, b_blocks, h, block_ids, k=1,
                                     noise=noise, interpret=interpret)
     return ids[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def tier_fused_topk_tpu(W_blocks, b_blocks, h, block_ids, k: int = 5,
+                        interpret: bool = True
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-TIER fused entry for the adaptive softmax heads
+    (repro.heads.adaptive): the same in-VMEM subset reduction as
+    ``screened_fused_topk_tpu`` with the candidate blocks given DIRECTLY —
+    the frequency-tier layout IS the routing, so there is no cluster_route
+    step. ``block_ids`` (B, K) int32 with sentinel ≥ n_blk; a fully-sentinel
+    row (a query whose tail-gate lost) yields NEG_INF vals, sentinel ids and
+    logZ = −∞, never NaN.
+    → (packed-row ids (B, k) int32, logits (B, k) f32, logZ (B,) f32);
+    callers translate packed rows to vocab ids through their tier id map.
+    """
+    return fused_screened_topk(W_blocks, b_blocks, h,
+                               block_ids.astype(jnp.int32), k=k,
+                               interpret=interpret)

@@ -285,6 +285,23 @@ def head_shardings(mesh) -> dict:
     }
 
 
+def adaptive_head_shardings(mesh) -> dict:
+    """Placements for the adaptive frequency-tiered head
+    (repro.heads.adaptive): the short-list tier's packed tiles, the tail
+    gate vectors, and the packed-row id maps are REPLICATED — every shard
+    scores the frequent short-list locally, it is small by construction —
+    while the rare-tail region (W (n·Ls_t, d), b, and the per-shard
+    (n, C, kb) local block tables) row-partitions over "model" exactly like
+    the fully-sharded heads, so each tail cluster's tiles live on the shard
+    owning their packed vocab range."""
+    return {
+        "tail_W": vocab_sharded(mesh, 2),
+        "tail_b": vocab_sharded(mesh, 1),
+        "tail_cand": vocab_sharded(mesh, 3),
+        "replicated": NamedSharding(mesh, P()),
+    }
+
+
 def screen_shardings(mesh, abstract_screen):
     """L2S screening params: v (r, d) and cand_idx (r, K) are small —
     replicated in the baseline (the vocab-sharded L2S variant lives in the

@@ -37,9 +37,18 @@ DEFAULT_ACCURACY: Dict[str, float] = {
     "exact": 1.0, "exact-sharded": 1.0,
     "screened": 0.99, "screened-sharded": 0.99, "screened-pallas": 0.99,
     "screened-cpu": 0.99,
+    "adaptive": 0.98, "adaptive-sharded": 0.98,
     "svd": 0.95, "shortlist": 0.90, "greedy-mips": 0.85,
     "lsh-mips": 0.70, "pca-mips": 0.70,
 }
+
+# Heads whose decode is provably exact BY CONSTRUCTION (the sharded merge is
+# bit-identical to single-device top-k). An ``accuracy_floor`` of exactly
+# 1.0 means "no approximation tolerated" and is only satisfiable by these:
+# a MEASURED agreement estimate that rounds to float 1.0 (or a floor
+# computed as 1.0 − ε that rounds back to 1.0) must never promote an
+# approximate head past it.
+EXACT_HEADS = frozenset({"exact", "exact-sharded"})
 
 
 def head_eligible(name: str, meta: dict, request: ServeRequest,
@@ -55,7 +64,12 @@ def head_eligible(name: str, meta: dict, request: ServeRequest,
     floor = request.accuracy_floor
     if wide_k is not None and request.k > wide_k:
         floor = max(floor, 1.0)
-    if accuracy.get(name, 0.0) < floor:
+    if floor >= 1.0:
+        # exactness demanded: membership test against the exact-head
+        # sentinel, NOT a >= comparison on a measured estimate
+        if name not in EXACT_HEADS:
+            return False
+    elif accuracy.get(name, 0.0) < floor:
         return False
     if request.sampled and not meta.get("supports_sampling", True):
         return False
@@ -160,8 +174,15 @@ class CostAwarePolicy(RoutingPolicy):
                        key=lambda nm: self.accuracy.get(nm[0], 0.0))[0]
 
         def cost(meta):
+            # flops_per_query is documented "NaN when unmodeled"
+            # (heads/base.py); an unmodeled head is INELIGIBLE FOR COST
+            # RANKING — returning inf here would still let it win or lose
+            # on the bytes tie-break, which is meaningless without a flops
+            # model to tie on
             f = meta.get("flops_per_query")
-            return math.inf if f is None or math.isnan(f) else f
+            if f is None or math.isnan(f):
+                return None
+            return float(f)
 
         def mem_cost(meta):
             # memory-profile tie-break between equal-flops heads: the fused
@@ -170,8 +191,15 @@ class CostAwarePolicy(RoutingPolicy):
             # regardless of candidate order
             b = meta.get("bytes_per_query")
             return math.inf if b is None or math.isnan(b) else b
-        return min(eligible, key=lambda nm: (cost(nm[1]),
-                                             mem_cost(nm[1])))[0]
+
+        modeled = [(name, meta) for name, meta in eligible
+                   if cost(meta) is not None]
+        if not modeled:
+            # every eligible head is unmodeled: candidate (tier) order
+            # decides — never a comparison against NaN
+            return eligible[0][0]
+        return min(modeled, key=lambda nm: (cost(nm[1]),
+                                            mem_cost(nm[1])))[0]
 
 
 def route_requests(requests: Sequence[ServeRequest], policy: RoutingPolicy,

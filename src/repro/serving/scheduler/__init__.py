@@ -7,7 +7,8 @@ from repro.serving.scheduler.queue import (TIER_DEADLINES, TIER_PRIORITY,
                                            AdmissionPolicy, AdmissionRejected,
                                            BudgetAdmission, QueuedRequest,
                                            RequestQueue, SchedulerLoad,
-                                           head_flops, tier_priority)
+                                           head_flops, head_flops_modeled,
+                                           tier_priority)
 from repro.serving.scheduler.scheduler import ContinuousScheduler
 from repro.serving.scheduler.stats import ServerStats
 
@@ -15,4 +16,4 @@ __all__ = ["ContinuousScheduler", "ServerStats", "RequestQueue",
            "QueuedRequest", "AdmissionPolicy", "AdmissionDecision",
            "AdmissionRejected", "AcceptAll", "BudgetAdmission",
            "SchedulerLoad", "TIER_DEADLINES", "TIER_PRIORITY",
-           "head_flops", "tier_priority"]
+           "head_flops", "head_flops_modeled", "tier_priority"]

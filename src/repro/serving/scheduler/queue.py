@@ -168,14 +168,32 @@ class AdmissionRejected:
 
 
 def head_flops(catalog: Dict[str, dict], name: Optional[str]) -> float:
-    """Per-step flops charge for serving on ``name`` (0 when unknown —
-    an uncataloged engine-default head costs nothing against the budget
-    because the budget has no number to compare it to)."""
+    """Per-step flops CHARGE for serving on ``name`` (0 when unknown — an
+    uncataloged engine-default head costs nothing against the budget because
+    the budget has no number to compare it to). Admission gating is
+    stricter: ``BudgetAdmission`` refuses to ADMIT a NaN-cost head against a
+    flops budget at all (``head_flops_modeled``) — this function only prices
+    work that is already in flight."""
     meta = catalog.get(name) or {}
     f = meta.get("flops_per_query")
     if f is None or (isinstance(f, float) and math.isnan(f)):
         return 0.0
     return float(f)
+
+
+def head_flops_modeled(catalog: Dict[str, dict], name: Optional[str]) -> bool:
+    """True iff ``name``'s catalog entry carries a real (non-NaN, non-None)
+    ``flops_per_query`` — the precondition for admitting it against a flops
+    budget. A NaN-cost head charged via ``head_flops`` would count 0.0:
+    admitted free and preferred as the "cheapest" downgrade, which is
+    exactly backwards for an UNKNOWN cost."""
+    f = (catalog.get(name) or {}).get("flops_per_query")
+    if f is None:
+        return False
+    try:
+        return not math.isnan(float(f))
+    except (TypeError, ValueError):
+        return False
 
 
 class AdmissionPolicy:
@@ -252,14 +270,22 @@ class BudgetAdmission(AdmissionPolicy):
                            f"{load.pages_queued} queued)")
         budget_left = math.inf if self.flops_budget is None else \
             self.flops_budget - load.flops_in_flight
+
+        def costed(name):
+            # with a flops budget in force, only heads with a MODELED cost
+            # may be admitted or offered as downgrades — a NaN-cost head
+            # would charge 0.0 and ride the budget for free
+            return self.flops_budget is None or \
+                head_flops_modeled(catalog, name)
+
         meta = catalog.get(head)
         if meta is not None and self._eligible(head, meta, request) \
-                and head_flops(catalog, head) <= budget_left:
+                and costed(head) and head_flops(catalog, head) <= budget_left:
             return AdmissionDecision("accept", head)
         # routed head over budget or ineligible: cheapest eligible stand-in
         alternates = sorted(
             (head_flops(catalog, n), n) for n, m in catalog.items()
-            if n != head and self._eligible(n, m, request))
+            if n != head and self._eligible(n, m, request) and costed(n))
         for flops, name in alternates:
             if flops <= budget_left:
                 return AdmissionDecision(
@@ -272,6 +298,10 @@ class BudgetAdmission(AdmissionPolicy):
             reason = (f"no eligible head: accuracy_floor="
                       f"{request.accuracy_floor} / memory budget excludes "
                       f"all candidates")
+        elif not costed(head):
+            reason = (f"head {head!r} has unmodeled (NaN) flops_per_query — "
+                      f"it cannot be admitted against a flops budget and no "
+                      f"modeled stand-in fits")
         else:
             reason = (f"flops budget exhausted: in-flight "
                       f"{load.flops_in_flight:.3g} + {head} "

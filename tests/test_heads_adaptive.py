@@ -1,0 +1,286 @@
+"""Unit tests for the adaptive frequency-tiered softmax heads (ISSUE 7
+tentpole): tier construction from unigram counts, the −inf-safe cross-tier
+logZ recombine, fused/unfused parity, the k > short-list descent rule, the
+tier-weighted cost model, and the per-tier kernel entry in kernels/ops.py.
+
+The numpy reference below recomputes the head's contract from scratch —
+short-list always scored, argmax tail cluster scored iff its gate beats the
+k-th short-list logit (over the PADDED short tier, NEG_INF pads included,
+exactly the kernel's comparison) — so a regression in either the layout or
+the gate rule fails against an independent implementation, not a sibling
+code path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import heads
+from repro.heads.adaptive import (_build_tiers, _masked_lse,
+                                  combine_tier_logz)
+from repro.heads.base import NEG_INF
+from repro.kernels.screen import V_BLK
+
+L, D, B = 150, 24, 8
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    rng = np.random.default_rng(3)
+    W = np.asarray(rng.standard_normal((L, D)), np.float32)
+    b = np.asarray(rng.standard_normal(L) * 0.1, np.float32)
+    h = np.asarray(rng.standard_normal((B, D)), np.float32)
+    counts = rng.permutation(1e6 / np.arange(1, L + 1) ** 1.5)
+    return W, b, h, counts
+
+
+# -- tier construction -------------------------------------------------------
+
+def test_tier_layout_from_counts(fixture):
+    W, b, _, counts = fixture
+    lay = _build_tiers(W, b, counts, shortlist=40, n_tails=3)
+    # the short tier is EXACTLY the top-40 words by count
+    top40 = set(np.argsort(-counts, kind="stable")[:40].tolist())
+    assert set(lay.order[:40].tolist()) == top40
+    assert lay.F == 40 and lay.C == 3
+    assert sum(lay.tail_sizes) == L - 40
+    # every vocab word appears exactly once in the packed gid map; pads = L
+    real = lay.gid[lay.gid < L]
+    assert sorted(real.tolist()) == list(range(L))
+    assert lay.gid[-1] == L                      # kernel-sentinel absorber
+    # packed tiles are block-aligned per tier: short tier owns nb0 blocks
+    assert lay.Wblk.shape == (lay.n_blk, V_BLK, D)
+    assert lay.nb0 == -(-40 // V_BLK)
+    # pads never win: NEG_INF bias on every non-vocab packed row
+    assert np.all(lay.bblk.reshape(-1)[lay.gid[:-1] == L] <= NEG_INF / 2)
+    assert 0.0 < lay.p_descend < 1.0
+    assert lay.exp_tail_words > 0.0
+
+
+def test_tier_layout_deterministic_fallback(fixture):
+    W, b, _, _ = fixture
+    a = _build_tiers(W, b, None, shortlist=40, n_tails=3)
+    c = _build_tiers(W, b, None, shortlist=40, n_tails=3)
+    np.testing.assert_array_equal(a.order, c.order)      # reproducible
+    # fallback ranks by weight-row norm, descending
+    norms = np.linalg.norm(W, axis=1)
+    assert np.all(np.diff(norms[a.order]) <= 1e-6)
+
+
+def test_tier_layout_rejects_bad_inputs(fixture):
+    W, b, _, _ = fixture
+    with pytest.raises(ValueError, match="counts"):
+        _build_tiers(W, b, np.ones(L + 1), shortlist=40, n_tails=3)
+    with pytest.raises(ValueError, match="n_tails"):
+        heads.get("adaptive", W=W, b=b, n_tails=0)
+    with pytest.raises(ValueError, match="n_tails"):
+        heads.get("adaptive-sharded", W=W, b=b, n_tails=0, n_shards=1)
+
+
+# -- −inf-safe recombination -------------------------------------------------
+
+def test_combine_tier_logz_units():
+    a = jnp.asarray([0.0, -jnp.inf, 1.0, -jnp.inf])
+    b = jnp.asarray([0.0, 2.5, -jnp.inf, -jnp.inf])
+    out = np.asarray(combine_tier_logz(a, b))
+    assert not np.any(np.isnan(out))
+    np.testing.assert_allclose(out[0], np.log(2.0), rtol=1e-6)
+    np.testing.assert_allclose(out[1], 2.5, rtol=1e-6)   # one tier absent
+    np.testing.assert_allclose(out[2], 1.0, rtol=1e-6)
+    assert out[3] == -np.inf                             # BOTH absent: p=0
+
+
+def test_masked_lse_all_masked_row_is_neg_inf():
+    logits = jnp.asarray([[1.0, 2.0, NEG_INF],
+                          [NEG_INF, NEG_INF, NEG_INF]])
+    out = np.asarray(_masked_lse(logits))
+    assert not np.any(np.isnan(out))
+    np.testing.assert_allclose(out[0], np.logaddexp(1.0, 2.0), rtol=1e-6)
+    assert out[1] == -np.inf
+
+
+# -- numpy reference for the full head contract ------------------------------
+
+def _reference(W, b, counts, shortlist, n_tails, h, k):
+    """Independent recomputation: per-row candidate set (short words ∪
+    descended tail cluster), exact logits, logZ over that set."""
+    lay = _build_tiers(W, b, counts, shortlist, n_tails)
+    short = lay.order[:lay.F]
+    offs = np.cumsum([lay.F] + lay.tail_sizes)
+    tails = [lay.order[s:e] for s, e in zip(offs[:-1], offs[1:])]
+    slog = h @ W[short].T + b[short]                       # (B, F)
+    pad = lay.nb0 * V_BLK - lay.F
+    spad = np.pad(slog, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    ks = min(k, spad.shape[1])
+    kth = np.sort(spad, axis=1)[:, ::-1][:, ks - 1]
+    gate = np.stack([h @ W[t].mean(0) + b[t].mean() for t in tails], axis=1)
+    cluster = gate.argmax(axis=1)
+    descend = (gate.max(axis=1) >= kth) | (ks < k)
+    out = []
+    for i in range(h.shape[0]):
+        words = list(short)
+        if descend[i]:
+            words += list(tails[cluster[i]])
+        logit = h[i] @ W[words].T + b[words]
+        lz = float(np.log(np.exp(logit - logit.max()).sum()) + logit.max())
+        top = np.argsort(-logit, kind="stable")[:k]
+        out.append((set(np.asarray(words)[top][logit[top] > NEG_INF / 2]
+                        .tolist()), lz))
+    return out, descend
+
+
+@pytest.mark.parametrize("k", [5, 40])
+def test_adaptive_matches_numpy_reference(k):
+    """Engineered mixed-branch batch: counts are strictly decreasing (tier
+    order = vocab order), tail cluster 0 (words 40..76) gets a planted
+    direction u added to its weight rows, and half the queries align with
+    +u (their gate wins → descend) while the other half align with −u
+    (gate loses → short-list only)."""
+    rng = np.random.default_rng(9)
+    W = np.asarray(rng.standard_normal((L, D)), np.float32)
+    b = np.asarray(rng.standard_normal(L) * 0.1, np.float32)
+    counts = 1e6 / np.arange(1, L + 1) ** 1.5
+    u = np.zeros(D, np.float32)
+    u[0] = 3.0
+    W[40:77] += u                                # tail cluster 0's signature
+    h = np.asarray(rng.standard_normal((B, D)) * 0.1, np.float32)
+    h[:B // 2, 0] += 4.0
+    h[B // 2:, 0] -= 4.0
+    head = heads.get("adaptive", W=W, b=b, counts=counts, shortlist=40,
+                     n_tails=3)
+    ids, vals = head.topk(h, k)
+    _, lp = head.topk_logprobs(h, k)
+    ids = np.asarray(ids)
+    vals = np.asarray(vals, np.float32)
+    lp = np.asarray(lp, np.float32)
+    ref, descend = _reference(W, b, counts, 40, 3, h, k)
+    assert descend[:B // 2].all()                # both branches exercised
+    if k == 5:
+        assert not descend[B // 2:].any()
+    for i, (want_ids, want_lz) in enumerate(ref):
+        got = ids[i][vals[i] > NEG_INF / 2]
+        assert set(got.tolist()) == want_ids, i
+        np.testing.assert_allclose(vals[i][: len(got)] - lp[i][: len(got)],
+                                   want_lz, rtol=1e-4, atol=1e-4)
+    assert not np.any(np.isnan(lp))
+
+
+@pytest.mark.parametrize("k", [5, 40, 120])
+def test_fused_matches_unfused(fixture, k):
+    """The jnp escape hatch and the Pallas path share ids bit-for-bit and
+    values to accumulation tolerance."""
+    W, b, h, counts = fixture
+    kw = dict(W=W, b=b, counts=counts, shortlist=40, n_tails=3)
+    fused = heads.get("adaptive", **kw)
+    plain = heads.get("adaptive", fused=False, **kw)
+    fids, fvals = fused.topk(h, k)
+    uids, uvals = plain.topk(h, k)
+    np.testing.assert_array_equal(np.asarray(fids), np.asarray(uids))
+    np.testing.assert_allclose(np.asarray(fvals), np.asarray(uvals),
+                               rtol=2e-5, atol=1e-5)
+    _, flp = fused.topk_logprobs(h, k)
+    _, ulp = plain.topk_logprobs(h, k)
+    np.testing.assert_allclose(np.asarray(flp), np.asarray(ulp),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fused.next(h)),
+                                  np.asarray(plain.next(h)))
+
+
+def test_k_exceeding_shortlist_forces_descent(fixture):
+    """k larger than the short-list capacity: every query descends, valid
+    results = short words + its tail cluster, everything past that is the
+    (NEG_INF, sentinel-L) convention — never NaN."""
+    W, b, h, counts = fixture
+    head = heads.get("adaptive", W=W, b=b, counts=counts, shortlist=40,
+                     n_tails=3)
+    k = 140                                     # > nb0·V_BLK = 128
+    ids, vals = head.topk(h, k)
+    ids = np.asarray(ids)
+    vals = np.asarray(vals, np.float32)
+    lay = head._lay
+    for i in range(B):
+        valid = int((vals[i] > NEG_INF / 2).sum())
+        assert valid in {40 + s for s in lay.tail_sizes}, (i, valid)
+        assert np.all(ids[i][valid:] == L)
+        assert np.all(ids[i][:valid] < L)
+    _, lp = head.topk_logprobs(h, k)
+    lp = np.asarray(lp, np.float32)
+    assert not np.any(np.isnan(lp))
+    assert np.all(lp[vals <= NEG_INF / 2] <= NEG_INF / 2)
+
+
+def test_shortlist_full_vocab_degenerates_to_exact(fixture):
+    W, b, h, _ = fixture
+    head = heads.get("adaptive", W=W, b=b, shortlist=L)
+    eids, evals = heads.get("exact", W=W, b=b).topk(h, 5)
+    ids, vals = head.topk(h, 5)
+    for i in range(B):
+        assert (set(np.asarray(ids)[i].tolist()) ==
+                set(np.asarray(eids)[i].tolist()))
+    np.testing.assert_allclose(np.sort(np.asarray(vals)),
+                               np.sort(np.asarray(evals)),
+                               rtol=2e-5, atol=1e-5)
+
+
+# -- cost model --------------------------------------------------------------
+
+def test_cost_model_monotone_in_skew(fixture):
+    """The tier-weighted flops model must reward Zipfian skew: uniform
+    unigram counts descend with probability (L−F)/L while a heavy-tailed
+    unigram rarely leaves the short-list — the property CostAwarePolicy
+    routes on."""
+    W, b, _, _ = fixture
+    kw = dict(W=W, b=b, shortlist=40, n_tails=3)
+    uniform = heads.get("adaptive", counts=np.ones(L), **kw)
+    zipf = heads.get("adaptive", counts=1e6 / np.arange(1, L + 1) ** 3.0,
+                     **kw)
+    assert zipf.flops_per_query < uniform.flops_per_query
+    assert zipf.bytes_per_query < uniform.bytes_per_query
+    exact_flops = float(L * D)
+    assert zipf.flops_per_query < exact_flops
+    # both are honestly modeled (the NaN-cost satellite's counterpart)
+    for head in (uniform, zipf):
+        d = head.describe()
+        assert np.isfinite(d["flops_per_query"])
+        assert np.isfinite(d["bytes_per_query"])
+        assert d["memory_bytes"] >= W.nbytes
+
+
+def test_registry_factories_tolerate_engine_context(fixture):
+    """The engine passes its whole head_kwargs context to every factory —
+    the adaptive factories must ignore foreign keys (screen, rho, ...)."""
+    W, b, h, counts = fixture
+    head = heads.get("adaptive", W=W, b=b, screen=None, rho=16,
+                     counts=counts, shortlist=40)
+    assert head.topk(h, 5)[0].shape == (B, 5)
+    sharded = heads.get("adaptive-sharded", W=W, b=b, screen=None, rho=16,
+                        counts=counts, shortlist=40, n_shards=1)
+    assert sharded.topk(h, 5)[0].shape == (B, 5)
+
+
+# -- the per-tier kernel entry (kernels/ops.py) ------------------------------
+
+def test_tier_fused_topk_tpu_matches_lax_topk(fixture):
+    from repro.kernels.ops import pack_head_blocks, tier_fused_topk_tpu
+    W, b, h, _ = fixture
+    Wb, bb = pack_head_blocks(jnp.asarray(W), jnp.asarray(b))
+    n_blk = Wb.shape[0]
+    blocks = jnp.broadcast_to(jnp.arange(n_blk, dtype=jnp.int32)[None],
+                              (B, n_blk))
+    rows, vals, logz = tier_fused_topk_tpu(Wb, bb, jnp.asarray(h), blocks,
+                                           k=5, interpret=True)
+    full = jnp.asarray(h) @ Wb.reshape(-1, D).T + bb.reshape(-1)[None]
+    evals, erows = jax.lax.top_k(full, 5)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(erows))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(evals),
+                               rtol=2e-5, atol=1e-5)
+    ref_lz = np.asarray(jax.nn.logsumexp(
+        jnp.where(full <= NEG_INF / 2, -jnp.inf, full), axis=-1))
+    np.testing.assert_allclose(np.asarray(logz), ref_lz, rtol=1e-5,
+                               atol=1e-5)
+    # the all-sentinel row contract the lazy tail rides on
+    sent = jnp.full((B, n_blk), n_blk, jnp.int32)
+    rows, vals, logz = tier_fused_topk_tpu(Wb, bb, jnp.asarray(h), sent,
+                                           k=5, interpret=True)
+    assert np.all(np.asarray(rows) == n_blk * V_BLK)
+    assert np.all(np.asarray(vals) <= NEG_INF / 2)
+    assert np.all(np.asarray(logz) == -np.inf)

@@ -63,6 +63,8 @@ CASES = [
     ("screened-sharded", {}, "screen"),
     ("screened-cpu", {}, "screen"),
     ("screened-pallas", {}, "screen_blk"),
+    ("adaptive", dict(shortlist=L), None),            # no tails → exact
+    ("adaptive-sharded", dict(shortlist=L), None),
     ("svd", dict(rho=D, n_top=L), None),
     ("shortlist", dict(n_head=L), None),
     ("greedy-mips", dict(budget=L * 32), None),
@@ -91,8 +93,9 @@ def _build(fixture, name, kw, screen_key):
 def test_registry_covers_required_backends():
     names = heads.names()
     for required in ["exact", "exact-sharded", "screened",
-                     "screened-sharded", "screened-pallas", "svd",
-                     "shortlist", "greedy-mips", "lsh-mips", "pca-mips"]:
+                     "screened-sharded", "screened-pallas", "adaptive",
+                     "adaptive-sharded", "svd", "shortlist", "greedy-mips",
+                     "lsh-mips", "pca-mips"]:
         assert required in names, names
     assert len(names) >= 6
     assert {name for name, _, _ in CASES} == set(names), \
@@ -272,6 +275,154 @@ def test_screened_sharded_matches_screened(sharded_fixture, n_shards, k):
     assert s.min() >= 0 and s.max() < LS
     t0 = head.sample(jax.random.key(2), fx["h"], temperature=0.0)
     np.testing.assert_array_equal(np.asarray(t0), np.asarray(sids)[:, 0])
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("k", [K, 40, 120])
+def test_adaptive_sharded_matches_adaptive(sharded_fixture, n_shards, k):
+    """adaptive-sharded == adaptive bit-for-bit on ids at every shard count:
+    shortlist=50 splits 203 words into a 1-block short tier + 3 tail
+    clusters whose widths (51) are NOT V_BLK- or shard-divisible (padding
+    path), counts=None exercises the deterministic weight-norm fallback,
+    and k=120 exceeds the short-list capacity (every query must descend)
+    AND any single tier's valid words (sentinel-padding path)."""
+    _require_devices(n_shards)
+    fx = sharded_fixture
+    ad = heads.get("adaptive", W=fx["W"], b=fx["b"], shortlist=50, n_tails=3)
+    sh = heads.get("adaptive-sharded", W=fx["W"], b=fx["b"], shortlist=50,
+                   n_tails=3, n_shards=n_shards)
+    aids, avals = ad.topk(fx["h"], k)
+    ids, vals = sh.topk(fx["h"], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(aids))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(avals),
+                               rtol=1e-6, atol=1e-6)
+    alids, alp = ad.topk_logprobs(fx["h"], k)
+    lids, lp = sh.topk_logprobs(fx["h"], k)
+    lp = np.asarray(lp, np.float32)
+    np.testing.assert_array_equal(np.asarray(lids), np.asarray(alids))
+    np.testing.assert_allclose(lp, np.asarray(alp, np.float32), atol=1e-5)
+    assert not np.any(np.isnan(lp))                # sentinel rows stay −inf
+    # greedy + temperature-0 sampling agree across the shard counts
+    np.testing.assert_array_equal(np.asarray(sh.next(fx["h"])),
+                                  np.asarray(ad.next(fx["h"])))
+    t0 = sh.sample(jax.random.key(0), fx["h"], temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t0),
+                                  np.asarray(ad.next(fx["h"])))
+
+
+def test_adaptive_short_tier_materializes_no_full_vocab_buffer(
+        sharded_fixture):
+    """ISSUE 7 HLO-cost satellite: the fused adaptive path must never
+    materialize a full-vocab (or full packed-tier) f32 logit buffer — only
+    the per-tier O(k) results reach HBM. The unfused escape hatch DOES
+    materialize its packed short-tier row, which keeps this probe from
+    being vacuously true."""
+    from repro.heads.adaptive import (_fused_short_topk, _fused_tiered_topk,
+                                      _unfused_short_topk)
+    from repro.launch.hlo_cost import materializes_f32_buffer
+    fx = sharded_fixture
+    ad = heads.get("adaptive", W=fx["W"], b=fx["b"], shortlist=50, n_tails=3)
+    args = (ad._Wb, ad._bb, ad._gid, ad._short_blocks, ad._tail_tab,
+            ad._g, ad._gb, fx["h"])
+    text = _fused_tiered_topk.lower(*args, k=K, L=LS, interpret=True) \
+        .compile().as_text()
+    n_blk = ad._Wb.shape[0]
+    assert not materializes_f32_buffer(text, N, LS)
+    assert not materializes_f32_buffer(text, N, n_blk * 128)
+    # anti-vacuity pair on the no-tails geometry: unfused materializes the
+    # (N, n_blk·V_BLK) packed logit row, fused must not
+    full = heads.get("adaptive", W=fx["W"], b=fx["b"], shortlist=LS)
+    fargs = (full._Wb, full._bb, full._gid, full._short_blocks, fx["h"])
+    utext = _unfused_short_topk.lower(*fargs, k=K, L=LS, interpret=True) \
+        .compile().as_text()
+    ftext = _fused_short_topk.lower(*fargs, k=K, L=LS, interpret=True) \
+        .compile().as_text()
+    nb = full._Wb.shape[0]
+    assert materializes_f32_buffer(utext, N, nb * 128)
+    assert not materializes_f32_buffer(ftext, N, nb * 128)
+
+
+# -- empty-candidate-row convention (ISSUE 7 satellite) ----------------------
+# Heads that can route a query to an EMPTY candidate set must report
+# log-probability NEG_INF (probability 0) with sentinel ids — never NaN and
+# never a fake uniform distribution from log-softmax'ing an all-−inf row.
+
+EMPTY_ROW_CAPABLE = {"screened", "screened-cpu", "screened-sharded",
+                     "screened-pallas"}
+
+
+def _empty_row_fixture():
+    """2-cluster screen where cluster 0 has NO candidates; queries with
+    h[:, 0] = +5 route there, queries with h[:, 0] = −5 route to the
+    full-coverage cluster 1."""
+    rng = np.random.default_rng(11)
+    Le, d, n = 96, 16, 8
+    W = jnp.asarray(rng.standard_normal((Le, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(Le) * 0.1, jnp.float32)
+    h = np.asarray(rng.standard_normal((n, d)), np.float32)
+    h[:n // 2, 0] = 5.0
+    h[n // 2:, 0] = -5.0
+    v = np.zeros((2, d), np.float32)
+    v[0, 0], v[1, 0] = 1.0, -1.0
+    mask = np.zeros((2, Le), bool)
+    mask[1] = True                                 # cluster 0 stays EMPTY
+    idx, lens = candidates_to_padded(mask, Le)
+    screen = ScreenParams(v=jnp.asarray(v), cand_idx=jnp.asarray(idx),
+                          cand_len=jnp.asarray(lens), vocab_size=Le)
+    maskb = np.zeros((2, 1), bool)                 # 96 words → 1 block
+    maskb[1] = True
+    idxb, lensb = candidates_to_padded(maskb, Le, block=128)
+    screen_blk = ScreenParams(v=jnp.asarray(v), cand_idx=jnp.asarray(idxb),
+                              cand_len=jnp.asarray(lensb), vocab_size=Le,
+                              block=128)
+    return Le, W, b, jnp.asarray(h), screen, screen_blk
+
+
+def _empty_row_head(name, Le, W, b, screen, screen_blk, **extra):
+    kw = dict(W=W, b=b, **extra)
+    if name == "screened-pallas":
+        kw["screen"] = screen_blk
+    elif name.startswith("screened"):
+        kw["screen"] = screen
+    if name.endswith("-sharded"):
+        kw["n_shards"] = 1
+    if name.startswith("adaptive"):
+        kw.update(shortlist=32, n_tails=2)
+    return heads.get(name, **kw)
+
+
+@pytest.mark.parametrize("name", sorted(heads.names()))
+def test_empty_candidate_rows_are_neg_inf_never_nan(name):
+    """EVERY registered head: topk_logprobs yields finite-or-NEG_INF
+    log-probs (no NaN, nothing > 0); heads that can produce an empty
+    candidate row additionally report NEG_INF + sentinel ids on exactly
+    the rows routed to the empty cluster. Pre-fix, `screened` handed
+    empty rows a fake uniform distribution (log_softmax of all-−inf)."""
+    from repro.heads.base import NEG_INF
+    Le, W, b, h, screen, screen_blk = _empty_row_fixture()
+    head = _empty_row_head(name, Le, W, b, screen, screen_blk)
+    ids, lp = head.topk_logprobs(h, 5)
+    ids, lp = np.asarray(ids), np.asarray(lp, np.float32)
+    assert not np.any(np.isnan(lp)), name
+    assert np.all(lp <= 1e-6), name
+    if name in EMPTY_ROW_CAPABLE:
+        assert np.all(lp[:4] <= NEG_INF / 2), (name, lp[:4])
+        assert np.all(ids[:4] >= Le), (name, ids[:4])
+        assert np.all(lp[4:, 0] > NEG_INF / 2), name   # full cluster is live
+
+
+def test_empty_candidate_rows_unfused_pallas_variant():
+    """The screened-pallas jnp escape hatch (fused=False) shares the fused
+    kernel's empty-row contract."""
+    from repro.heads.base import NEG_INF
+    Le, W, b, h, screen, screen_blk = _empty_row_fixture()
+    head = heads.get("screened-pallas", W=W, b=b, screen=screen_blk,
+                     fused=False)
+    ids, lp = head.topk_logprobs(h, 5)
+    lp = np.asarray(lp, np.float32)
+    assert not np.any(np.isnan(lp))
+    assert np.all(lp[:4] <= NEG_INF / 2)
+    assert np.all(np.asarray(ids)[:4] >= Le)
 
 
 @pytest.mark.multidevice

@@ -295,6 +295,38 @@ def test_budget_admission_downgrades_to_cheaper_eligible_head():
     assert isinstance(d, AdmissionDecision)
 
 
+def test_budget_admission_never_admits_nan_cost_heads():
+    """ISSUE 7 NaN-cost regression: with a flops budget in force, a head
+    whose flops_per_query is NaN (documented "unmodeled") must never be
+    admitted or offered as a downgrade — pre-fix it was charged 0.0 and
+    rode the budget for free, preferred as the "cheapest" stand-in."""
+    catalog = {
+        "nan-head": {"flops_per_query": float("nan"), "memory_bytes": 1,
+                     "n_shards": None, "supports_sampling": True},
+        "exact": {"flops_per_query": 1e6, "memory_bytes": 4_000_000,
+                  "n_shards": None, "supports_sampling": True},
+    }
+    req = ServeRequest(prompt=np.arange(4), max_new=2)
+    adm = BudgetAdmission(flops_budget=2e6, accuracy={"nan-head": 0.99})
+    # a request ROUTED to the NaN head gets rerouted to a modeled head
+    d = adm.admit(req, "nan-head", catalog, SchedulerLoad())
+    assert (d.action, d.head) == ("downgrade", "exact")
+    # budget nearly spent: exact no longer fits, and the NaN head must NOT
+    # be the downgrade (pre-fix: admitted at charge 0.0)
+    d = adm.admit(req, "exact", catalog,
+                  SchedulerLoad(flops_in_flight=1.5e6))
+    assert d.action == "reject" and d.head is None
+    assert "budget exhausted" in d.reason
+    # only the NaN head exists → typed reject naming the unmodeled cost
+    d = adm.admit(req, "nan-head", {"nan-head": catalog["nan-head"]},
+                  SchedulerLoad())
+    assert d.action == "reject" and "unmodeled" in d.reason
+    # without a flops budget the NaN head is admissible (nothing to charge)
+    lim = BudgetAdmission(queue_limit=4, accuracy={"nan-head": 0.99})
+    d = lim.admit(req, "nan-head", catalog, SchedulerLoad())
+    assert (d.action, d.head) == ("accept", "nan-head")
+
+
 def test_budget_admission_downgrade_end_to_end(trained):
     """Integration: the policy routes everything to exact but lists
     screened as a candidate; a budget sized for one exact + change

@@ -107,6 +107,81 @@ def test_cost_aware_memory_budget_prefers_sharded():
     assert none_fit.route(_req(), CATALOG) == "exact"
 
 
+def test_cost_aware_nan_cost_is_ineligible_for_ranking():
+    """ISSUE 7 NaN-cost regression: a head whose flops_per_query is NaN
+    (documented "unmodeled") must not participate in cost ranking at all.
+    Pre-fix, NaN mapped to inf and the decision fell through to the BYTES
+    tie-break — an unmodeled head could win or lose on a number that is
+    meaningless without a flops model to tie on."""
+    cat = dict(CATALOG)
+    cat["stub-a"] = {"flops_per_query": float("nan"), "bytes_per_query": 9e9,
+                     "memory_bytes": 1, "n_shards": None,
+                     "supports_sampling": True}
+    cat["stub-b"] = {"flops_per_query": float("nan"), "bytes_per_query": 1.0,
+                     "memory_bytes": 1, "n_shards": None,
+                     "supports_sampling": True}
+    # a modeled head beats ANY unmodeled head, even one with tiny bytes
+    pol = CostAwarePolicy(["stub-a", "stub-b", "screened"],
+                          accuracy={"stub-a": 0.99, "stub-b": 0.99})
+    assert pol.route(_req(), cat) == "screened"
+    # every eligible head unmodeled → candidate (tier) order decides;
+    # pre-fix the bytes tie-break picked stub-b
+    pol2 = CostAwarePolicy(["stub-a", "stub-b"], fallback="stub-b",
+                           accuracy={"stub-a": 0.99, "stub-b": 0.99})
+    assert pol2.route(_req(), cat) == "stub-a"
+
+
+def test_accuracy_floor_one_requires_provably_exact_head():
+    """ISSUE 7 floor-1.0 regression: accuracy_floor == 1.0 is satisfiable
+    ONLY by the exact-by-construction heads (EXACT_HEADS membership), never
+    by a MEASURED agreement estimate that rounds to float 1.0."""
+    # a measured 1.0 for an approximate head must not promote it
+    pol = CostAwarePolicy(["screened", "exact"], accuracy={"screened": 1.0})
+    assert pol.route(_req(accuracy_floor=1.0), CATALOG) == "exact"
+    # a floor computed as 1.0 − ε rounds back to exactly 1.0 in float —
+    # the sentinel has to catch that too
+    eps_floor = 1.0 - 1e-17
+    assert eps_floor == 1.0
+    assert pol.route(_req(accuracy_floor=eps_floor), CATALOG) == "exact"
+    # the wide-k promotion raises the floor through the same sentinel
+    assert pol.route(_req(k=64), CATALOG) == "exact"
+    # both exact-by-construction heads satisfy the floor
+    cat = dict(CATALOG)
+    cat["exact-sharded"] = {"flops_per_query": 2e5,
+                            "memory_bytes": 4_000_000, "n_shards": 8,
+                            "supports_sampling": True}
+    shard_pol = CostAwarePolicy(["exact-sharded"], fallback="exact")
+    assert shard_pol.route(_req(accuracy_floor=1.0), cat) == "exact-sharded"
+
+
+def test_cost_aware_routes_zipfian_traffic_to_adaptive():
+    """ISSUE 7 acceptance: on a Zipfian unigram the adaptive head's
+    tier-weighted cost model undercuts a dense 0.5-density screen, so
+    CostAwarePolicy routes standard traffic onto it — and an accuracy floor
+    above its nominal 0.98 falls back to the screened head."""
+    from repro.core.screening import ScreenParams, candidates_to_padded
+    rng = np.random.default_rng(13)
+    Lz, d, r = 600, 32, 4
+    W = jnp.asarray(rng.standard_normal((Lz, d)), jnp.float32)
+    b = jnp.zeros((Lz,), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((r, d)), jnp.float32)
+    mask = rng.random((r, Lz)) < 0.5            # dense screen: ~300 words
+    idx, lens = candidates_to_padded(mask, Lz)
+    screen = ScreenParams(v=v, cand_idx=jnp.asarray(idx),
+                          cand_len=jnp.asarray(lens), vocab_size=Lz)
+    counts = rng.permutation(1e6 / np.arange(1, Lz + 1) ** 1.5)
+    scr = heads.get("screened", W=W, b=b, screen=screen)
+    ad = heads.get("adaptive", W=W, b=b, counts=counts, shortlist=64,
+                   n_tails=2)
+    assert ad.flops_per_query < scr.flops_per_query
+    catalog = {"screened": scr.describe(), "adaptive": ad.describe(),
+               "exact": heads.get("exact", W=W, b=b).describe()}
+    pol = CostAwarePolicy(["adaptive", "screened", "exact"])
+    assert pol.route(_req(), catalog) == "adaptive"
+    assert pol.route(_req(accuracy_floor=0.99), catalog) == "screened"
+    assert pol.route(_req(accuracy_floor=1.0), catalog) == "exact"
+
+
 def test_serve_request_validates_fields_upfront():
     """Bad k / max_new / top_p must raise typed ValueErrors at construction
     — not as shape/NaN failures deep inside a jitted decode step."""
