@@ -33,7 +33,8 @@ takes the construction context as kwargs (``W``, ``b``, ``screen``, ...) and
 tolerates extras — that single seam is how new approximation methods,
 kernels, and per-request policies plug into the engine and benchmarks."""
 from repro.heads.base import (NEG_INF, MissingScreenError, SoftmaxHead,
-                              sample_from_logits, screened_flops_per_query,
+                              adjust_logits, sample_from_logits,
+                              screened_flops_per_query,
                               tiered_flops_per_query)
 from repro.heads.registry import get, names, register
 from repro.heads.exact import ExactHead

@@ -115,6 +115,12 @@ class SoftmaxHead:
     # (e.g. a pure-ranking retrieval index) sets False and routing policies
     # keep sampled requests off it
     supports_sampling: bool = True
+    # True iff the head implements ``dist_logits`` — its full-vocabulary
+    # sampling law in vocab coordinates. Speculative decoding's rejection
+    # rule needs the draft (q) and target (p) distributions over ONE
+    # coordinate system; spec policies keep sampled traffic off heads
+    # that can't produce it
+    supports_dist: bool = False
     # vocab-sharded heads set this to their jax.sharding.Mesh in prepare();
     # the serving engine uses it to build mesh-aware jitted decode steps
     # (inputs replicated over the head's device set instead of device 0)
@@ -138,6 +144,19 @@ class SoftmaxHead:
     def sample(self, key, h, temperature: float = 1.0,
                top_p: float = 1.0) -> jnp.ndarray:
         raise NotImplementedError
+
+    def dist_logits(self, h) -> jnp.ndarray:
+        """(B, V) distribution logits over the FULL vocabulary: softmax of a
+        row is exactly the law ``sample(key, h, 1.0, 1.0)`` draws from, with
+        ``NEG_INF`` at every word outside the head's own candidate space
+        (the §4.2 probability-0 convention). Temperature / nucleus
+        adjustments are applied downstream via ``adjust_logits`` — the same
+        transform ``sample_from_logits`` draws through — so speculative
+        rejection sampling can score ANY sampling configuration. Heads that
+        implement it set ``supports_dist = True``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose a full-vocab "
+            f"distribution (supports_dist is False)")
 
     # -- metadata -----------------------------------------------------------
     @property
@@ -215,6 +234,7 @@ class SoftmaxHead:
         return {"name": self.name, "device_kind": self.device_kind,
                 "is_jittable": self.is_jittable,
                 "supports_sampling": self.supports_sampling,
+                "supports_dist": self.supports_dist,
                 "flops_per_query": self.flops_per_query,
                 "bytes_per_query": self.bytes_per_query,
                 "memory_bytes": self.memory_bytes,
@@ -225,15 +245,19 @@ class SoftmaxHead:
                 f"flops_per_query={self.flops_per_query:.3g})")
 
 
-def sample_from_logits(key, logits, temperature: float, top_p: float):
-    """Temperature + nucleus sampling over a (B, C) logit matrix.
+def adjust_logits(logits, temperature: float, top_p: float):
+    """The temperature / nucleus transform ``sample_from_logits`` draws
+    through, exposed on its own so speculative decoding can compute the
+    EXACT proposal law of a sampled head: ``categorical(adjust_logits(
+    dist_logits(h), T, p))`` is distributed as ``sample(key, h, T, p)``.
 
-    temperature ≤ 0 degenerates to argmax; top_p < 1 keeps the smallest
-    prefix of the sorted distribution with mass ≥ top_p.
+    Entries already masked to ``NEG_INF`` stay exactly ``NEG_INF`` (dividing
+    the sentinel by a temperature > 1 would shrink its magnitude and could
+    promote an empty row past the ``<= NEG_INF / 2`` emptiness test
+    downstream consumers share). Requires temperature > 0.
     """
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
+    masked = logits <= NEG_INF / 2
+    logits = jnp.where(masked, NEG_INF, logits / temperature)
     if top_p < 1.0:
         # Mask by sorted RANK, not by value: a `logits >= cutoff` test keeps
         # every position tied with the cutoff logit, which can exceed the
@@ -248,4 +272,16 @@ def sample_from_logits(key, logits, temperature: float, top_p: float):
         k_keep = jnp.sum(cum < top_p, axis=-1) + 1
         rank = jnp.argsort(order, axis=-1)
         logits = jnp.where(rank < k_keep[:, None], logits, NEG_INF)
+    return logits
+
+
+def sample_from_logits(key, logits, temperature: float, top_p: float):
+    """Temperature + nucleus sampling over a (B, C) logit matrix.
+
+    temperature ≤ 0 degenerates to argmax; top_p < 1 keeps the smallest
+    prefix of the sorted distribution with mass ≥ top_p.
+    """
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = adjust_logits(logits, temperature, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -37,10 +37,17 @@ def _next(W, b, h):
 
 class ExactHead(SoftmaxHead):
     name = "exact"
+    supports_dist = True
 
     def __init__(self, W, b):
         self.W = jnp.asarray(W)
         self.b = jnp.asarray(b)
+
+    def dist_logits(self, h):
+        """Full-vocab logits — the exact head's sampling law IS the raw
+        softmax, so this is the target distribution p speculative decoding
+        verifies drafts against."""
+        return _logits(self.W, self.b, h)
 
     def topk(self, h, k: int):
         return _topk(self.W, self.b, h, k)

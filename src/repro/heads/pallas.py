@@ -38,6 +38,7 @@ from repro.kernels.screen import V_BLK
 
 class ScreenedPallasHead(SoftmaxHead):
     name = "screened-pallas"
+    supports_dist = True
 
     def __init__(self, W, b, screen: ScreenParams, interpret: bool = True,
                  fused: bool = True):
@@ -137,6 +138,13 @@ class ScreenedPallasHead(SoftmaxHead):
                                     temperature, top_p)
         return jnp.take_along_axis(word_ids, choice[:, None],
                                    axis=-1)[:, 0].astype(jnp.int32)
+
+    def dist_logits(self, h):
+        """Same sampling law as the jnp screened head (the fused Gumbel-max
+        path is an exact categorical over the candidate set), so the scatter
+        to vocab coordinates is shared with it."""
+        from repro.heads.screened import _dist_logits
+        return _dist_logits(self.W, self.b, self.screen, h)
 
     @property
     def flops_per_query(self) -> float:

@@ -52,8 +52,26 @@ def _candidate_logits(W, b, screen, h):
     return screened_logits(W, b, screen, h, cluster)
 
 
+@jax.jit
+def _dist_logits(W, b, screen, h):
+    """Candidate logits scattered to vocab coordinates: NEG_INF off the
+    routed candidate set (§4.2 probability 0 elsewhere). The padding
+    sentinel word id is ``vocab_size`` (screening.py), so scattering into a
+    (B, V+1) buffer and dropping the last column discards it — padded
+    candidate logits are NEG_INF anyway, so duplicate sentinel writes all
+    agree."""
+    cluster = assign_clusters(screen.v, h)
+    logits, word_ids = screened_logits(W, b, screen, h, cluster)
+    B, V = h.shape[0], screen.vocab_size
+    full = jnp.full((B, V + 1), NEG_INF, jnp.float32)
+    full = full.at[jnp.arange(B)[:, None], word_ids].set(
+        logits.astype(jnp.float32))
+    return full[:, :V]
+
+
 class ScreenedHead(SoftmaxHead):
     name = "screened"
+    supports_dist = True
 
     def __init__(self, W, b, screen: ScreenParams):
         require_screen(screen, "ScreenedHead")
@@ -69,6 +87,9 @@ class ScreenedHead(SoftmaxHead):
 
     def next(self, h):
         return self.topk(h, 1)[0][:, 0]
+
+    def dist_logits(self, h):
+        return _dist_logits(self.W, self.b, self.screen, h)
 
     def sample(self, key, h, temperature: float = 1.0, top_p: float = 1.0):
         """Temperature/nucleus sample WITHIN the routed candidate set

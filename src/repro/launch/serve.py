@@ -51,6 +51,12 @@ def main(argv=None):
                          "against exact (screened, screened-sharded, "
                          "exact-sharded, screened-pallas, ...); defaults "
                          "to screened when --l2s fits a screen")
+    ap.add_argument("--draft-head", default=None,
+                    help="speculative decoding: registry name of the cheap "
+                         "DRAFT head; the exact head verifies every draft, "
+                         "so output is unchanged. Needs --scheduler (spec "
+                         "runs on SpecDecodeStream lanes) and a head "
+                         "distinct from the verify head")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -90,6 +96,35 @@ def main(argv=None):
             return 2
         except Exception:
             pass
+    # --draft-head combos are all conclusive BEFORE training: unknown names,
+    # drafting with the verify head itself, serving modes that have no spec
+    # lane, and screening drafts without a screen to fit
+    if args.draft_head is not None:
+        if args.draft_head not in heads_registry.names():
+            print(f"[serve] unknown draft head {args.draft_head!r}; "
+                  f"registered: {heads_registry.names()}")
+            return 2
+        if not args.scheduler:
+            print("[serve] --draft-head needs --scheduler: speculative "
+                  "decoding runs on the scheduler's SpecDecodeStream lanes")
+            return 2
+        if args.draft_head == "exact":
+            print("[serve] --draft-head 'exact' IS the verify head — "
+                  "drafting with the head that verifies speculates "
+                  "nothing; pick a cheaper draft (screened, "
+                  "screened-pallas, adaptive)")
+            return 2
+        if args.draft_head != "exact" and not args.l2s:
+            W0, b0 = model.softmax_weights(params)
+            try:
+                heads_registry.get(args.draft_head, W=W0[:8], b=b0[:8],
+                                   screen=None)
+            except MissingScreenError as e:
+                print(f"[serve] cannot build draft head "
+                      f"{args.draft_head!r}: {e} (pass --l2s to fit one)")
+                return 2
+            except Exception:
+                pass
 
     corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=min(64, cfg.vocab_size // 4),
                               seed=args.seed)
@@ -118,14 +153,19 @@ def main(argv=None):
         print(f"[serve] L2S fitted: r={args.clusters} "
               f"C_max={screen.c_max} block={screen.block}")
 
+    # spec decode can transiently write draft_len − 1 rejected positions
+    # past a request's final token (SpecPolicy default draft_len = 4);
+    # without this slack the policy's headroom check would always decline
+    spec_slack = 3 if args.draft_head is not None else 0
     engine = DecodeEngine(model, params, screen=screen,
-                          max_len=args.prompt_len + args.max_new)
+                          max_len=args.prompt_len + args.max_new + spec_slack)
     prompts = corpus.sample_batch(args.requests, args.prompt_len, seed=42)
     requests = [ServeRequest(prompt=p, max_new=args.max_new)
                 for p in prompts]
 
     if args.scheduler:
-        return _serve_scheduler(engine, requests, head_name)
+        return _serve_scheduler(engine, requests, head_name,
+                                draft=args.draft_head)
 
     t0 = time.time()
     exact = engine.serve_batch(requests, policy=StaticPolicy("exact"))
@@ -149,7 +189,7 @@ def main(argv=None):
     return 0
 
 
-def _serve_scheduler(engine, requests, head_name):
+def _serve_scheduler(engine, requests, head_name, draft=None):
     """--scheduler mode: continuous batching with admission control.
 
     Traffic is the launcher's request set re-tiered round-robin
@@ -158,22 +198,31 @@ def _serve_scheduler(engine, requests, head_name):
     to the catalog so a burst sheds load through the typed reject path.
     Families the paged KV pool supports additionally serve over a
     ``PagePool`` (shared-prefix radix cache + COW pages) and report pool
-    utilization in the log."""
+    utilization in the log. With ``draft`` set (--draft-head) every
+    request carries it explicitly and exact-routed traffic decodes
+    speculatively on ``SpecDecodeStream`` lanes — same tokens, fewer
+    exact-head weight streams."""
     import dataclasses
 
     from repro.serving import (BudgetAdmission, ContinuousScheduler,
-                               PagePool, ServeResult, TierPolicy)
+                               PagePool, ServeResult, SpecPolicy, TierPolicy)
 
     fast = head_name if head_name not in (None, "exact") else None
-    candidates = tuple(dict.fromkeys(filter(None, (fast, "exact"))))
+    candidates = tuple(dict.fromkeys(filter(None, (fast, draft, "exact"))))
     catalog = engine.head_catalog(candidates)
     if fast is not None and fast not in catalog:
         fast = None                      # unbuildable in this engine
+    if draft is not None and draft not in catalog:
+        print(f"[serve] draft head {draft!r} is not buildable in this "
+              f"engine (no fitted screen?) — serving plain")
+        draft = None
     policy = TierPolicy({"realtime": fast or "exact"}, default="exact")
     budget = 4.0 * max(m["flops_per_query"] for m in catalog.values())
     tiers = ["realtime", "standard", "batch"]
-    traffic = [dataclasses.replace(r, latency_tier=tiers[i % 3])
+    traffic = [dataclasses.replace(r, latency_tier=tiers[i % 3],
+                                   draft_head=draft)
                for i, r in enumerate(requests)]
+    spec = SpecPolicy(drafts=(draft,)) if draft is not None else None
 
     kv_pool = None
     if engine.model.cfg.family in ("lstm", "dense", "moe") \
@@ -185,7 +234,7 @@ def _serve_scheduler(engine, requests, head_name):
                            page_size=page)
     sched = ContinuousScheduler(engine, policy=policy,
                                 admission=BudgetAdmission(flops_budget=budget),
-                                max_slots=4, kv_pool=kv_pool)
+                                max_slots=4, kv_pool=kv_pool, spec=spec)
     t0 = time.time()
     results = sched.serve(traffic)
     wall = time.time() - t0
@@ -200,6 +249,13 @@ def _serve_scheduler(engine, requests, head_name):
           f"p95 {snap['latency']['p95_s']:.3f}s | per-head "
           + ", ".join(f"{h}: {d['requests']} req {d['tokens_per_s']:.0f} "
                       f"tok/s" for h, d in snap["per_head"].items()))
+    if snap.get("spec"):
+        sp = snap["spec"]
+        print(f"[serve] scheduler: spec {sp['rounds']} rounds | "
+              f"{sp['accepted_tokens_per_step']:.2f} accepted tok/step | "
+              f"draft acceptance {sp['draft_acceptance']:.3f} | "
+              f"{sp['verify_queries']} verify queries "
+              f"({sp['verify_flops']:.3g} flops)")
     if snap.get("pool"):
         p = snap["pool"]
         print(f"[serve] scheduler: kv pool {p['pages_in_use']}/"

@@ -7,10 +7,8 @@ from repro.serving.scheduler import (AdmissionRejected, BudgetAdmission,
 from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
                                   RoutingPolicy, StaticPolicy, TierPolicy,
                                   route_requests)
-# deprecated re-exports, kept for one deprecation cycle alongside
-# repro.serving.sampling — each call emits a DeprecationWarning and
-# delegates to the matching repro.heads backend
-from repro.serving.sampling import greedy_next, screened_greedy_next
+from repro.serving.spec import (DraftLenController, SpecDecodeStream,
+                                SpecPolicy, spec_step_flops)
 
 __all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
            "PagePool", "PagedDecodeStream", "PoolExhausted", "RadixCache",
@@ -19,4 +17,5 @@ __all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
            "DEFAULT_ACCURACY", "route_requests",
            "ContinuousScheduler", "ServerStats", "BudgetAdmission",
            "AdmissionRejected",
-           "greedy_next", "screened_greedy_next"]
+           "SpecPolicy", "SpecDecodeStream", "DraftLenController",
+           "spec_step_flops"]

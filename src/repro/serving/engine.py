@@ -213,6 +213,64 @@ class DecodeEngine:
             self._put_step(key, fn)
         return self._step_cache[key]
 
+    # -- speculative decode steps (repro.serving.spec) -----------------------
+    def _spec_verify_step(self, head: SoftmaxHead, n_max: int):
+        """Batched multi-position VERIFY: greedy ids of ``head`` over n_max
+        stacked draft hidden states in ONE head call — the (V, d) softmax
+        weights stream from HBM once per round instead of once per token.
+        Signature ``fn(h_0, ..., h_{n_max-1}) -> (n_max, W) int32`` with each
+        ``h_i`` of fixed shape (W, d): the adaptive controller shrinking the
+        LIVE draft length (callers pad the tail by repeating the last hidden)
+        never changes shapes, so nothing re-traces. Cached under
+        ``(head.step_key(), "spec-verify", n_max)`` with the same LRU/mesh
+        discipline as every other composed step."""
+        key = (head.step_key(), "spec-verify", int(n_max))
+        if key not in self._step_cache:
+            if head.is_jittable:
+                def step(*hs):
+                    H = jnp.concatenate(hs, axis=0)        # (n_max·W, d)
+                    return head.next(H).reshape(len(hs), hs[0].shape[0])
+                if head.mesh is not None:
+                    # exact-SHARDED verify: every hidden joins the mesh
+                    fn = self._mesh_aware_jit(head, step, n_placed=n_max)
+                else:
+                    fn = jax.jit(step)
+            else:
+                def fn(*hs):
+                    H = np.concatenate([np.asarray(h) for h in hs], axis=0)
+                    return jnp.asarray(np.asarray(head.next(H)),
+                                       jnp.int32).reshape(len(hs),
+                                                          hs[0].shape[0])
+            self._put_step(key, fn)
+        else:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
+        return self._step_cache[key]
+
+    def _spec_dist_step(self, draft: SoftmaxHead, verify: SoftmaxHead,
+                        n_max: int, temperature: float, top_p: float):
+        """Sampled-verify companion: one call yields BOTH heads'
+        temperature/nucleus-adjusted full-vocab distribution logits over the
+        stacked draft hiddens — q (draft law) and p (target law) as
+        (n_max, W, V) — for the host-side rejection rule
+        (repro.serving.spec.acceptance). Never mesh-aware: sampled spec is
+        restricted to UNSHARDED verify heads (full-vocab rows are never
+        gathered across shards)."""
+        from repro.heads.base import adjust_logits
+        key = (draft.step_key(), "spec-dist", verify.step_key(), int(n_max),
+               float(temperature), float(top_p))
+        if key in self._step_cache:
+            self._step_cache.move_to_end(key)       # LRU hit → most recent
+        if key not in self._step_cache:
+            def step(*hs):
+                H = jnp.concatenate(hs, axis=0)            # (n_max·W, d)
+                W = hs[0].shape[0]
+                q = adjust_logits(draft.dist_logits(H), temperature, top_p)
+                p = adjust_logits(verify.dist_logits(H), temperature, top_p)
+                return (q.reshape(len(hs), W, -1),
+                        p.reshape(len(hs), W, -1))
+            self._put_step(key, jax.jit(step))
+        return self._step_cache[key]
+
     # -- paged decode steps (attention families; see repro.serving.kvpool) ---
     def _paged_greedy_step(self, head: SoftmaxHead):
         """Composed (decode over pool pages + head.next) step, cached under
@@ -424,6 +482,39 @@ class DecodeEngine:
         return PagedDecodeStream(self, hd, width, pool,
                                  temperature=temperature, top_p=top_p,
                                  seed=seed, head_name=name)
+
+    def open_spec_stream(self, draft_head: HeadLike,
+                         verify_head: Optional[HeadLike] = None,
+                         width: int = 4, draft_len: int = 4,
+                         temperature: Optional[float] = None,
+                         top_p: float = 1.0, seed: int = 0,
+                         kv_pool=None, adaptive: bool = True):
+        """Open a continuous SPECULATIVE decode stream: ``draft_head``
+        drafts up to ``draft_len`` tokens per round through the engine's
+        cached decode steps, ``verify_head`` (default: the engine's default
+        head) verifies the whole draft in one batched call, and only tokens
+        the verify head would itself have produced are emitted — greedy
+        output is bit-identical to a plain ``verify_head`` stream. With
+        ``adaptive`` a per-stream ``DraftLenController`` shrinks the live
+        draft length when measured acceptance drops (shapes stay padded to
+        ``draft_len``; nothing re-traces). See
+        ``repro.serving.spec.SpecDecodeStream``."""
+        from repro.serving.spec.policy import DraftLenController
+        from repro.serving.spec.stream import SpecDecodeStream
+        draft_name = draft_head if isinstance(draft_head, str) else \
+            getattr(draft_head, "name", "custom")
+        if verify_head is None:
+            verify_name = getattr(self.head, "name", "custom")
+        else:
+            verify_name = verify_head if isinstance(verify_head, str) else \
+                getattr(verify_head, "name", "custom")
+        controller = DraftLenController(draft_len) if adaptive else None
+        return SpecDecodeStream(self, draft_head, verify_head, width=width,
+                                draft_len=draft_len, temperature=temperature,
+                                top_p=top_p, seed=seed,
+                                draft_name=draft_name,
+                                verify_name=verify_name,
+                                controller=controller, kv_pool=kv_pool)
 
     # -- beam search (batch of 1 prompt, beam B_w) ---------------------------
     def beam_search(self, prompt: np.ndarray, beam: int, max_new: int,

@@ -40,6 +40,15 @@ class ServeRequest:
                        demands exact-softmax heads, 0.0 accepts anything.
     ``head``           explicit registry head name — set, it OVERRIDES the
                        policy (escape hatch; policies never see it).
+    ``draft_head``     explicit SPECULATIVE draft head name — set, it
+                       overrides the ``SpecPolicy`` pick (the scheduler
+                       still drops it when incompatible: same head as the
+                       verify head, not buildable, or a sampled request on
+                       a head without ``dist_logits``). Emitted tokens are
+                       always the VERIFY head's — a draft head never
+                       changes output, only speed.
+    ``draft_len``      tokens drafted per verify round for this request;
+                       None → the policy's default.
     """
 
     prompt: np.ndarray
@@ -51,6 +60,8 @@ class ServeRequest:
     latency_tier: str = "standard"
     accuracy_floor: float = 0.0
     head: Optional[str] = None
+    draft_head: Optional[str] = None
+    draft_len: Optional[int] = None
 
     def __post_init__(self):
         # validate EVERYTHING the decode loop consumes up front: a bad k or
@@ -68,6 +79,14 @@ class ServeRequest:
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"ServeRequest.top_p must be in (0, 1], got "
                              f"{self.top_p}")
+        if self.draft_len is not None and self.draft_len < 1:
+            raise ValueError(
+                f"ServeRequest.draft_len must be >= 1, got {self.draft_len}")
+        if self.draft_head is not None and self.draft_head == self.head:
+            raise ValueError(
+                f"ServeRequest.draft_head must differ from the verify head "
+                f"(both {self.draft_head!r}): drafting with the verify head "
+                f"verifies nothing")
 
     @property
     def sampled(self) -> bool:

@@ -67,6 +67,11 @@ class QueuedRequest:
     # pages already resident (paged schedulers price admission with this;
     # 0 under the non-paged path)
     pages: int = 0
+    # speculative decode assignment (repro.serving.spec.SpecPolicy): the
+    # draft head that speculates for this request, and the per-round draft
+    # length. ``draft is None`` = plain decode.
+    draft: Optional[str] = None
+    draft_len: int = 0
 
     @property
     def tier(self) -> str:
@@ -139,6 +144,11 @@ class SchedulerLoad:
     pages_evictable: int = 0           # cache-held pages reclaimable under pressure
     pages_queued: int = 0              # marginal pages of admitted-unplaced work
     request_pages: int = 0             # marginal pages of the request being admitted
+    # extra per-step flops THIS submission would add on top of its routed
+    # head's own cost — the draft head's steps under speculative decode.
+    # Only the routed-head budget fit pays it: a downgrade drops the spec
+    # assignment along with the routed head, so stand-ins price plain.
+    request_extra_flops: float = 0.0
 
 
 @dataclass
@@ -280,7 +290,9 @@ class BudgetAdmission(AdmissionPolicy):
 
         meta = catalog.get(head)
         if meta is not None and self._eligible(head, meta, request) \
-                and costed(head) and head_flops(catalog, head) <= budget_left:
+                and costed(head) and (head_flops(catalog, head)
+                                      + load.request_extra_flops
+                                      ) <= budget_left:
             return AdmissionDecision("accept", head)
         # routed head over budget or ineligible: cheapest eligible stand-in
         alternates = sorted(
@@ -303,8 +315,10 @@ class BudgetAdmission(AdmissionPolicy):
                       f"it cannot be admitted against a flops budget and no "
                       f"modeled stand-in fits")
         else:
+            extra = f" + spec draft {load.request_extra_flops:.3g}" \
+                if load.request_extra_flops else ""
             reason = (f"flops budget exhausted: in-flight "
                       f"{load.flops_in_flight:.3g} + {head} "
-                      f"{head_flops(catalog, head):.3g} > "
+                      f"{head_flops(catalog, head):.3g}{extra} > "
                       f"{self.flops_budget:.3g}")
         return AdmissionDecision("reject", reason=reason)

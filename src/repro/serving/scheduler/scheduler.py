@@ -68,6 +68,16 @@ class ContinuousScheduler:
                     after two consecutive stalled ticks the lowest-tier
                     running slot is force-evicted so the pool can never
                     livelock a full stream set.
+    ``spec``        optional ``repro.serving.spec.SpecPolicy``: requests
+                    ACCEPTED on their routed head may additionally get a
+                    cheap draft head and run on a ``SpecDecodeStream``
+                    (emitted tokens stay the verify head's — speculation
+                    never changes output). Admission prices the draft
+                    head's extra per-step flops
+                    (``SchedulerLoad.request_extra_flops``) and, under a
+                    pool, the ``draft_len − 1`` rollback pages a round can
+                    transiently write; a DOWNGRADE drops the spec
+                    assignment along with the routed head.
     """
 
     def __init__(self, engine: DecodeEngine, policy=None,
@@ -75,11 +85,12 @@ class ContinuousScheduler:
                  max_slots: int = 4, max_streams: int = 8,
                  deadlines: Optional[Dict[str, float]] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 kv_pool=None):
+                 kv_pool=None, spec=None):
         if max_slots < 1 or max_streams < 1:
             raise ValueError("max_slots and max_streams must be >= 1")
         self.engine = engine
         self.kv_pool = kv_pool
+        self.spec = spec
         self._pool_stalled_ticks = 0    # consecutive ticks blocked on pages
         self.policy = policy
         self.admission = admission if admission is not None else AcceptAll()
@@ -129,15 +140,22 @@ class ContinuousScheduler:
             load.pages_queued = sum(qr.pages for qr in self.queue)
         return load
 
-    def _marginal_pages(self, request: ServeRequest) -> int:
+    def _marginal_pages(self, request: ServeRequest,
+                        draft_slack: int = 0) -> int:
         """Pages this request will newly allocate: its full footprint
         (prompt + decode budget) minus fully-shared prefix pages already
-        resident in the radix cache (a peek — no LRU side effects)."""
+        resident in the radix cache (a peek — no LRU side effects).
+
+        ``draft_slack`` (speculative requests: ``draft_len − 1``) is the
+        rollback overshoot a draft/verify round can transiently write past
+        the final token; spec streams reserve it up front and never dedupe
+        through the radix cache, so shared-prefix credit does not apply."""
         pool = self.kv_pool
         P = pool.page_size
-        total = int(request.prompt.shape[0]) + int(request.max_new)
+        total = int(request.prompt.shape[0]) + int(request.max_new) \
+            + int(draft_slack)
         shared = 0
-        if pool.radix is not None:
+        if draft_slack == 0 and pool.radix is not None:
             m = pool.radix.match([int(t) for t in request.prompt], peek=True)
             shared = sum(1 for _, nv in m.chain if nv == P)
         return max(0, (total + P - 1) // P - shared)
@@ -163,16 +181,42 @@ class ContinuousScheduler:
         # that happen to sit in the accumulated catalog
         cand = tuple(getattr(self.policy, "candidates", ())) \
             if self.policy is not None else ()
+        spec_cand = tuple(getattr(self.spec, "candidates", ())) \
+            if self.spec is not None else ()
         names = tuple(dict.fromkeys(
-            cand + (() if routed is None else (routed,))))
+            cand + spec_cand + (() if routed is None else (routed,))))
         self._ensure_catalog(names)
         catalog = {n: self._catalog[n] for n in names if n in self._catalog}
         if routed is None:
             catalog[name] = self.engine.head.describe()
+        # provisional spec assignment BEFORE admission, so admission prices
+        # the draft head's extra per-step flops and the rollback pages; a
+        # downgrade drops it again below
+        draft = None
+        draft_len = 0
+        if self.spec is not None:
+            draft = self.spec.draft_for(request, name, catalog,
+                                        max_len=self.engine.max_len)
+            if draft is not None:
+                draft_len = self.spec.draft_len_for(request,
+                                                    self.engine.max_len)
         load = self._load()
         if self.kv_pool is not None:
-            load.request_pages = self._marginal_pages(request)
+            load.request_pages = self._marginal_pages(
+                request, draft_slack=draft_len - 1 if draft else 0)
+        if draft is not None:
+            load.request_extra_flops = head_flops(catalog, draft)
         decision = self.admission.admit(request, name, catalog, load)
+        if decision.action != "accept" and draft is not None:
+            # speculation is OPTIONAL: before letting the draft's extra
+            # flops/pages downgrade (or reject) the routed head, retry the
+            # admission PLAIN — dropping the draft must always be preferred
+            # to dropping the head the router chose
+            draft, draft_len = None, 0
+            load.request_extra_flops = 0.0
+            if self.kv_pool is not None:
+                load.request_pages = self._marginal_pages(request)
+            decision = self.admission.admit(request, name, catalog, load)
         if decision.action == "reject":
             self._results[rid] = AdmissionRejected(
                 request=request, reason=decision.reason, stage="admission")
@@ -183,10 +227,13 @@ class ContinuousScheduler:
             head = decision.head
         else:
             head = routed        # None keeps the engine default instance
-        qr = self.queue.push(request, head,
-                             cost=head_flops(catalog, decision.head or name),
-                             req_id=rid)
+        cost = head_flops(catalog, decision.head or name)
+        if draft is not None:
+            cost += head_flops(catalog, draft)
+        qr = self.queue.push(request, head, cost=cost, req_id=rid)
         qr.pages = load.request_pages
+        qr.draft = draft
+        qr.draft_len = draft_len
         self.stats.admitted += 1
         self.stats.observe_queue(len(self.queue))
         return rid
@@ -197,8 +244,13 @@ class ContinuousScheduler:
         """Stream signature: head + the request's ``sampling_key()`` (the
         same statics serve_batch's group_key carries, minus the prompt
         length — streams prefill per request, so mixed-length traffic
-        shares a lane, unlike serve_batch's batched prefill groups)."""
-        return (qr.head,) + qr.request.sampling_key()
+        shares a lane, unlike serve_batch's batched prefill groups).
+        Speculative requests carry their (draft head, draft length) too —
+        a spec lane's round shape is a stream-wide static."""
+        sig = (qr.head,) + qr.request.sampling_key()
+        if qr.draft is not None:
+            sig += ("spec", qr.draft, qr.draft_len)
+        return sig
 
     def _stream_for(self, qr: QueuedRequest) -> Optional[DecodeStream]:
         sig = self._sig(qr)
@@ -214,7 +266,14 @@ class ContinuousScheduler:
             else:
                 return None
         req = qr.request
-        if self.kv_pool is not None:
+        if qr.draft is not None:
+            stream = self.engine.open_spec_stream(
+                draft_head=qr.draft, verify_head=qr.head,
+                width=self.max_slots, draft_len=qr.draft_len,
+                temperature=req.temperature, top_p=req.top_p, seed=req.seed,
+                kv_pool=self.kv_pool,
+                adaptive=getattr(self.spec, "adaptive", True))
+        elif self.kv_pool is not None:
             stream = self.engine.open_paged_stream(
                 self.kv_pool, head=qr.head, width=self.max_slots,
                 temperature=req.temperature, top_p=req.top_p, seed=req.seed)
@@ -269,8 +328,14 @@ class ContinuousScheduler:
             self._inflight[qr.id] = qr
             self.stats.queue_wait.record(now - qr.arrival)
             self.stats.record_decode(stream.head_name, 1, dt)  # first token
-        # 2. advance streams, retire finished sequences
+        # 2. advance streams, retire finished sequences. A spec stream's
+        #    tick is a whole draft/verify ROUND: it emits a VARIABLE number
+        #    of tokens (1..draft_len per slot), so its token credit is the
+        #    emitted-counter delta, not n_active, and the same delta feeds
+        #    the server-wide speculative telemetry.
         for stream in list(self._streams.values()):
+            spec_before = stream.spec_counters() \
+                if hasattr(stream, "spec_counters") else None
             if stream.n_active:
                 n_tok = stream.n_active
                 t0 = time.perf_counter()
@@ -283,8 +348,14 @@ class ContinuousScheduler:
                     pool_blocked = True
                     finished = stream.pop_finished()
                 else:
-                    self.stats.record_decode(stream.head_name, n_tok,
-                                             time.perf_counter() - t0)
+                    dt = time.perf_counter() - t0
+                    if spec_before is not None:
+                        after = stream.spec_counters()
+                        delta = {k: after[k] - spec_before[k]
+                                 for k in after}
+                        self.stats.record_spec(**delta)
+                        n_tok = delta["emitted"]
+                    self.stats.record_decode(stream.head_name, n_tok, dt)
             else:
                 finished = stream.pop_finished()
             for qr, request, tokens in finished:

@@ -54,6 +54,16 @@ class ServerStats:
         self._pool_cow_seen = 0
         self._pool_cow_ticks = 0
         self._pool_cow_total = 0
+        # speculative decoding (repro.serving.spec): draft/verify round
+        # accounting fed by the scheduler's per-tick spec_counters() deltas.
+        # All zero until a spec stream runs.
+        self.spec_rounds = 0             # per-slot draft/verify rounds
+        self.spec_draft_steps = 0        # trunk decode steps spent drafting
+        self.spec_drafted = 0            # tokens proposed by draft heads
+        self.spec_accepted = 0           # drafted tokens the verifier kept
+        self.spec_emitted = 0            # tokens emitted by spec streams
+        self.spec_verify_queries = 0     # verify-head queries (padded n_max·W)
+        self.spec_verify_flops = 0.0     # modeled flops of those queries
 
     # -- update hooks (called by ContinuousScheduler) ------------------------
     def _head(self, name: str) -> Dict[str, float]:
@@ -77,6 +87,20 @@ class ServerStats:
             self.deadline_met += 1
         else:
             self.deadline_missed += 1
+
+    def record_spec(self, rounds: int, draft_steps: int, drafted: int,
+                    accepted: int, emitted: int, verify_queries: int,
+                    verify_flops: float) -> None:
+        """One tick's speculative-decode delta (a round may emit several
+        tokens; ``record_decode`` separately credits those tokens to the
+        stream's composite head name)."""
+        self.spec_rounds += int(rounds)
+        self.spec_draft_steps += int(draft_steps)
+        self.spec_drafted += int(drafted)
+        self.spec_accepted += int(accepted)
+        self.spec_emitted += int(emitted)
+        self.spec_verify_queries += int(verify_queries)
+        self.spec_verify_flops += float(verify_flops)
 
     def observe_queue(self, depth: int) -> None:
         self.queue_depth = int(depth)
@@ -121,6 +145,21 @@ class ServerStats:
             "latency": self.latency.snapshot(),
             "queue_wait": self.queue_wait.snapshot(),
             "per_head": per_head,
+            "spec": None if self.spec_rounds == 0 else {
+                "rounds": self.spec_rounds,
+                "draft_steps": self.spec_draft_steps,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "emitted": self.spec_emitted,
+                # the headline numbers: >1 means speculation is paying
+                "accepted_tokens_per_step": (
+                    self.spec_emitted / self.spec_rounds),
+                "draft_acceptance": (
+                    self.spec_accepted / self.spec_drafted
+                    if self.spec_drafted else math.nan),
+                "verify_queries": self.spec_verify_queries,
+                "verify_flops": self.spec_verify_flops,
+            },
             "pool": None if self.pool is None else {
                 **self.pool,
                 "stalled_ticks": self.pool_stalled_ticks,

@@ -240,35 +240,18 @@ def test_numpy_baseline_head_decodes():
     assert bm.tokens.shape == (1, 4)
 
 
-def test_sampling_shims_deprecated():
-    """The old serving.sampling functions still work but warn, and agree
-    with their head equivalents."""
-    from repro.serving.sampling import (greedy_next, sample_next,
-                                        screened_greedy_next, topk_logprobs)
-    rng = np.random.default_rng(0)
-    L, d, r = 64, 8, 4
-    W = jnp.asarray(rng.standard_normal((L, d)), jnp.float32)
-    b = jnp.zeros((L,), jnp.float32)
-    mask = np.zeros((r, L), bool)
-    mask[:, :16] = True
-    idx, lens = candidates_to_padded(mask, L)
-    sp = ScreenParams(v=jnp.asarray(rng.standard_normal((r, d)), jnp.float32),
-                      cand_idx=jnp.asarray(idx), cand_len=jnp.asarray(lens),
-                      vocab_size=L)
-    h = jnp.asarray(rng.standard_normal((6, d)), jnp.float32)
-    with pytest.deprecated_call():
-        g = greedy_next(W, b, h)
-    np.testing.assert_array_equal(
-        np.asarray(g), np.asarray(heads.get("exact", W=W, b=b).next(h)))
-    with pytest.deprecated_call():
-        s = screened_greedy_next(W, b, sp, h)
-    assert int(jnp.max(s)) < 16
-    with pytest.deprecated_call():
-        ids, lp = topk_logprobs(W, b, h, k=5)
-    assert ids.shape == (6, 5)
-    with pytest.deprecated_call():
-        t0 = sample_next(jax.random.key(0), W, b, h, temperature=0.0)
-    np.testing.assert_array_equal(np.asarray(t0), np.asarray(g))
+def test_sampling_module_removed():
+    """The deprecated ``repro.serving.sampling`` shims completed their
+    deprecation cycle: the module is GONE from the package and from the
+    public serving surface — heads are the one next-token API."""
+    import importlib
+    import repro.serving as serving
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.serving.sampling")
+    for name in ("greedy_next", "screened_greedy_next", "sample_next",
+                 "topk_logprobs"):
+        assert not hasattr(serving, name)
+        assert name not in serving.__all__
 
 
 def test_train_launcher_checkpoint_resume(tmp_path):
