@@ -107,14 +107,22 @@ def update_bench_json(section: str, payload: dict,
     file (one top-level key per benchmark, so serve_mixed and
     serve_continuous accumulate into the same ``BENCH_serving.json`` and
     the perf trajectory is diffable across PRs). NaN/inf are serialized as
-    null — the file must stay strict-JSON parseable."""
+    null — the file must stay strict-JSON parseable.
+
+    Crash-safe: the merged file is written to a temp sibling and moved
+    into place with ``os.replace`` (atomic on POSIX), so a benchmark
+    killed mid-write can never leave a truncated ``BENCH_serving.json``
+    that silently eats every other benchmark's sections on the next
+    merge. A corrupt existing file is loudly rebuilt, not silently."""
     data = {}
     if os.path.exists(path):
         try:
             with open(path) as f:
                 data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {}                     # corrupt/partial file: start over
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"[bench] WARNING: existing {path} is unreadable "
+                  f"({e}); rebuilding it from this run's section only")
+            data = {}
 
     def _clean(o):
         if isinstance(o, dict):
@@ -129,9 +137,15 @@ def update_bench_json(section: str, payload: dict,
         return o
 
     data[section] = _clean(payload)
-    with open(path, "w") as f:
-        json.dump(data, f, indent=2, sort_keys=True)
-        f.write("\n")
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return path
 
 

@@ -39,14 +39,23 @@ except ImportError:                        # script's own dir is sys.path[0]
     from common import update_bench_json
     from serve_mixed import build_engine
 
-from repro.serving import (BudgetAdmission, ContinuousScheduler, PagePool,
-                           ServeRequest, ServeResult, TierPolicy)
-from repro.serving.scheduler import TIER_DEADLINES
+from repro.serving import (BudgetAdmission, CircuitBreaker,
+                           ContinuousScheduler, FaultInjector, LogicalClock,
+                           PagePool, ServeRequest, ServeResult,
+                           StreamWatchdog, TierPolicy)
+from repro.serving.scheduler import TIER_DEADLINES, AdmissionRejected
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--chaos", action="store_true",
+                    help="resilience workload: deterministic FaultInjector "
+                         "(transient/permanent/NaN/stall faults) + circuit "
+                         "breakers + watchdog on a simulated clock; "
+                         "reports the fault funnel, breaker transitions, "
+                         "greedy parity of fault-free survivors, and "
+                         "recompiles (expected 0 — chaos is host-side)")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged-KV workload: every prompt = one templated "
                          "system prompt + a short unique suffix, served "
@@ -92,6 +101,9 @@ def main(argv=None):
 
     cfg, corpus, engine = build_engine(args.reduced, args.seed)
 
+    if args.chaos:
+        return _chaos(args, cfg, corpus, engine,
+                      args.requests or (24 if args.reduced else 64))
     if args.shared_prefix:
         return _shared_prefix(args, cfg, corpus, engine, n_req, rate)
 
@@ -188,6 +200,126 @@ def _drive(sched, requests, rate, seed):
         elif nxt < len(requests):         # idle until the next arrival
             time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
     return time.perf_counter() - t0
+
+
+def _chaos(args, cfg, corpus, engine, n_req):
+    """--chaos: the resilience layer under deterministic fire.
+
+    All-greedy traffic over three heads on a simulated ``LogicalClock``
+    shared by scheduler, breaker and injector (the whole run replays
+    bit-identically from the seed). The armed fault schedule exercises
+    every degradation path: transient step faults (bounded retry),
+    a permanent fault (hard breaker trip → fallback re-route → cooldown →
+    half-open probe → close), NaN output corruption (guard detection),
+    injected stalls (watchdog eviction), and per-request timeouts.
+
+    Invariants printed and serialized: ZERO unhandled exceptions, the
+    funnel closes (arrivals == completed + typed rejects), fault-free
+    survivors decode bit-identical to solo ``engine.generate``, and the
+    recompile count after warmup is 0 — fault injection and detection are
+    entirely host-side, so chaos runs compile exactly what healthy runs
+    compile."""
+    max_new = args.max_new or 8
+    policy = TierPolicy({"realtime": "screened", "standard": "svd",
+                         "batch": "exact"}, default="screened")
+    catalog = engine.head_catalog(tuple(policy.candidates))
+    tiers = ["realtime", "standard", "batch"]
+    prompts = corpus.sample_batch(n_req, 16, seed=42)
+    requests = []
+    for i, p in enumerate(prompts):
+        # two late timeouts for coverage; everything else unbounded
+        requests.append(ServeRequest(
+            prompt=p, max_new=max_new, latency_tier=tiers[i % 3],
+            timeout_s=0.004 if i in (5, 11) else None))
+
+    # warmup compiles every greedy stream the run (or a fallback) could
+    # touch; chaos itself is host-side and adds zero executables
+    warm_p = corpus.sample_batch(1, 16, seed=7)
+    warmup = [ServeRequest(prompt=warm_p[0], max_new=2, head=name)
+              for name in catalog]
+    ContinuousScheduler(engine, policy=policy, max_slots=args.max_slots,
+                        max_streams=len(catalog) + 1).serve(warmup)
+    counts0 = engine.compiled_step_counts()
+
+    clock = LogicalClock(0.0, dt_per_read=1e-3)
+    injector = FaultInjector(seed=args.seed, clock=clock)
+    injector.arm("step", "transient", head="screened", count=3, after=2)
+    injector.arm("step", "permanent", head="svd", count=1, after=4)
+    injector.arm("step", "nan", head="screened", count=2, after=12)
+    injector.arm("step", "stall", head="exact", count=8, after=3)
+    injector.arm("join", "transient", head="svd", count=1, after=8)
+    injector.arm("tick", "delay", delay_s=2e-3, rate=0.1, count=5)
+    breaker = CircuitBreaker(failure_threshold=3, cooldown_s=0.05,
+                             clock=clock)
+    watchdog = StreamWatchdog(stall_timeout_s=5e-3)
+    deadlines = {t: s * args.deadline_scale
+                 for t, s in TIER_DEADLINES.items()}
+    sched = ContinuousScheduler(
+        engine, policy=policy, max_slots=args.max_slots, max_streams=8,
+        deadlines=deadlines, clock=clock, fault_injector=injector,
+        breaker=breaker, watchdog=watchdog, max_retries=2)
+    t0 = time.perf_counter()
+    unhandled = None
+    try:
+        for r in requests:
+            sched.submit(r)
+        results = sched.drain(max_ticks=5000)
+    except Exception as e:                     # noqa: BLE001 — the headline
+        unhandled = f"{type(e).__name__}: {e}"
+        results = sched.results()
+    wall = time.perf_counter() - t0
+    counts1 = engine.compiled_step_counts()
+    recompiles = sum(counts1.values()) - sum(counts0.values())
+
+    completed = [(i, r) for i, r in enumerate(results)
+                 if isinstance(r, ServeResult)]
+    rejects = [r for r in results if isinstance(r, AdmissionRejected)]
+    funnel_closed = len(completed) + len(rejects) == n_req
+    clean = [(i, r) for i, r in completed if i not in sched.fault_rids]
+    parity = True
+    for i, r in clean[:8]:
+        ref = engine.generate(requests[i].prompt[None],
+                              requests[i].max_new).tokens[0]
+        parity = parity and bool(np.array_equal(r.tokens, ref))
+
+    snap = sched.stats.snapshot()
+    rz = snap["resilience"] or {}
+    print(f"\n[serve_chaos] arrivals={n_req} max_new={max_new} heads="
+          f"{list(catalog)} devices={jax.device_count()} wall={wall:.2f}s")
+    print(f"[serve_chaos] unhandled exceptions: "
+          f"{unhandled or 0} (expected 0)")
+    print(f"[serve_chaos] funnel: {len(completed)} completed + "
+          f"{len(rejects)} typed rejects == {n_req} arrivals: "
+          f"{funnel_closed}")
+    print(f"[serve_chaos] faults {injector.telemetry()['fired_total']} "
+          f"fired ({rz.get('faults_transient', 0)} transient, "
+          f"{rz.get('faults_permanent', 0)} permanent) | retries "
+          f"{rz.get('retries', 0)} fallbacks {rz.get('fallbacks', 0)} "
+          f"faulted {rz.get('faulted', 0)} timed_out "
+          f"{rz.get('timed_out', 0)} stalls "
+          f"{rz.get('watchdog_stalls', 0)}")
+    print(f"[serve_chaos] breakers: trips {rz.get('breaker_trips', 0)} "
+          f"half-opens {rz.get('breaker_half_opens', 0)} closes "
+          f"{rz.get('breaker_closes', 0)} | states "
+          f"{rz.get('breaker_states', {})}")
+    print(f"[serve_chaos] greedy parity of {len(clean[:8])} fault-free "
+          f"survivors: {parity} | recompiles after warmup {recompiles} "
+          f"(expected 0)")
+    ok = unhandled is None and funnel_closed and parity and recompiles == 0
+    if args.json:
+        path = update_bench_json("serve_chaos", {
+            "devices": jax.device_count(), "vocab": cfg.vocab_size,
+            "arrivals": n_req, "max_new": max_new,
+            "reduced": args.reduced, "wall_s": wall,
+            "unhandled": unhandled, "funnel_closed": funnel_closed,
+            "completed": len(completed), "typed_rejects": len(rejects),
+            "fault_rids": len(sched.fault_rids),
+            "faults_fired": injector.telemetry(),
+            "greedy_parity": parity, "parity_checked": len(clean[:8]),
+            "recompiles": recompiles, "ok": ok, **snap,
+        }, path=args.json)
+        print(f"[serve_chaos] wrote {path}")
+    return 0 if ok else 1
 
 
 def _shared_prefix(args, cfg, corpus, engine, n_req, rate):

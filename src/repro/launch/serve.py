@@ -256,6 +256,17 @@ def _serve_scheduler(engine, requests, head_name, draft=None):
               f"draft acceptance {sp['draft_acceptance']:.3f} | "
               f"{sp['verify_queries']} verify queries "
               f"({sp['verify_flops']:.3g} flops)")
+    if snap.get("resilience"):
+        rz = snap["resilience"]
+        states = ", ".join(f"{h}: {s}" for h, s in
+                           rz["breaker_states"].items()) or "all closed"
+        print(f"[serve] scheduler: resilience "
+              f"{rz['faults_transient']}+{rz['faults_permanent']} faults "
+              f"(transient+permanent) | {rz['retries']} retries "
+              f"{rz['fallbacks']} fallbacks {rz['faulted']} faulted "
+              f"{rz['timed_out']} timed out | breakers {states} "
+              f"(trips {rz['breaker_trips']}, half-opens "
+              f"{rz['breaker_half_opens']}, closes {rz['breaker_closes']})")
     if snap.get("pool"):
         p = snap["pool"]
         print(f"[serve] scheduler: kv pool {p['pages_in_use']}/"

@@ -2,8 +2,12 @@ from repro.serving.engine import DecodeEngine, DecodeStream, GenerationResult
 from repro.serving.kvpool import (PagedDecodeStream, PagePool, PoolExhausted,
                                   RadixCache)
 from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.resilience import (CircuitBreaker, FaultInjector,
+                                      FaultSpec, HeadFault, LogicalClock,
+                                      StreamWatchdog)
 from repro.serving.scheduler import (AdmissionRejected, BudgetAdmission,
-                                     ContinuousScheduler, ServerStats)
+                                     ContinuousScheduler, SchedulerStalled,
+                                     ServerStats)
 from repro.serving.router import (DEFAULT_ACCURACY, CostAwarePolicy,
                                   RoutingPolicy, StaticPolicy, TierPolicy,
                                   route_requests)
@@ -15,7 +19,9 @@ __all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
            "ServeRequest", "ServeResult",
            "RoutingPolicy", "StaticPolicy", "TierPolicy", "CostAwarePolicy",
            "DEFAULT_ACCURACY", "route_requests",
-           "ContinuousScheduler", "ServerStats", "BudgetAdmission",
-           "AdmissionRejected",
+           "ContinuousScheduler", "SchedulerStalled", "ServerStats",
+           "BudgetAdmission", "AdmissionRejected",
            "SpecPolicy", "SpecDecodeStream", "DraftLenController",
-           "spec_step_flops"]
+           "spec_step_flops",
+           "FaultInjector", "FaultSpec", "HeadFault", "LogicalClock",
+           "CircuitBreaker", "StreamWatchdog"]

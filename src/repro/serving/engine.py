@@ -54,6 +54,7 @@ from repro.core.screening import ScreenParams
 from repro.heads.base import MissingScreenError, SoftmaxHead
 from repro.models.model import Model
 from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.resilience.faults import guard_tokens
 
 HeadLike = Union[str, SoftmaxHead]
 
@@ -615,6 +616,12 @@ class DecodeStream:
         self.engine = engine
         self.head = engine.resolve_head(head)
         self.head_name = head_name
+        # resilience hooks: the scheduler arms an injector on streams it
+        # opens; the vocab bound backs the always-on output guard (a head
+        # emitting sentinel/NaN ids raises a typed HeadFault instead of
+        # feeding garbage back into the decode)
+        self.fault_injector = None
+        self.vocab = int(engine.W.shape[0])
         self.width = int(width)
         self.temperature = temperature
         self.top_p = float(top_p)
@@ -689,7 +696,12 @@ class DecodeStream:
             first = hd.sample(k0, h_in, self.temperature, self.top_p)
         else:
             first = hd.next(h_in)
-        first = int(np.asarray(first)[0])
+        # guard BEFORE any stream state mutates: a join-boundary fault
+        # (injected or an honestly degenerate first token) leaves the
+        # stream exactly as it was, so the scheduler can retry or re-route
+        first = int(guard_tokens(self.fault_injector, "join",
+                                 self.head_name, first,
+                                 self.vocab).ravel()[0])
         if self._repl is not None:
             cache1 = jax.device_put(cache1, self._repl)
         self.cache = _splice_cache(self.cache, cache1, slot, eng.model.cfg)
@@ -719,14 +731,23 @@ class DecodeStream:
         eng = self.engine
         tok = jnp.asarray(self.tok)
         pos = jnp.asarray(self.pos)
+        # compute into locals and commit (cache, PRNG) only after the
+        # guard: a step-boundary fault leaves the stream untouched, so the
+        # scheduler's retry re-runs the identical step bit-for-bit (jax
+        # caches are immutable pytrees — holding the old reference IS the
+        # rollback, recurrent LSTM state included)
         if self.sampled:
             fn = eng._sample_step(self.head, self.temperature, self.top_p)
-            self._key, ki = jax.random.split(self._key)
-            nxt, _, self.cache = fn(eng.params, ki, tok, self.cache, pos)
+            key, ki = jax.random.split(self._key)
+            nxt, _, cache = fn(eng.params, ki, tok, self.cache, pos)
         else:
             fn = eng._greedy_step(self.head)
-            nxt, _, self.cache = fn(eng.params, tok, self.cache, pos)
-        nxt = np.asarray(nxt)
+            nxt, _, cache = fn(eng.params, tok, self.cache, pos)
+        nxt = guard_tokens(self.fault_injector, "step", self.head_name,
+                           nxt, self.vocab, rows=idx)
+        if self.sampled:
+            self._key = key
+        self.cache = cache
         for i in idx:
             s = self.slots[i]
             t = int(nxt[i])

@@ -46,6 +46,7 @@ import numpy as np
 from repro.serving.engine import _splice_cache, _StreamSlot
 from repro.serving.kvpool.pool import PagePool, PoolExhausted
 from repro.serving.request import ServeRequest
+from repro.serving.resilience.faults import HeadFault, guard_tokens
 
 
 class PagedDecodeStream:
@@ -69,6 +70,10 @@ class PagedDecodeStream:
         self.sampled = temperature is not None
         if self.sampled:
             self._key = jax.random.key(self.seed)
+        # resilience hooks: the scheduler arms the injector; the vocab
+        # bound makes the output guards honest-failure detectors too
+        self.fault_injector = None
+        self.vocab = int(engine.W.shape[0])
         self.family = engine.model.cfg.family
         self.max_pages = engine.max_len // pool.page_size
         self._repl = None
@@ -124,11 +129,17 @@ class PagedDecodeStream:
         hd = self.head
         h_in = h_last if hd.is_jittable else np.asarray(h_last)
         if self.sampled:
-            self._key, k0 = jax.random.split(self._key)
+            key, k0 = jax.random.split(self._key)
             first = hd.sample(k0, h_in, self.temperature, self.top_p)
         else:
             first = hd.next(h_in)
-        return int(np.asarray(first)[0])
+        # guard before the PRNG key (or any stream state) commits — join's
+        # page rollback plus an unconsumed key make the retry bit-identical
+        first = int(guard_tokens(self.fault_injector, "join", self.head_name,
+                                 first, self.vocab).ravel()[0])
+        if self.sampled:
+            self._key = key
+        return first
 
     # -- join -----------------------------------------------------------------
     def join(self, request: ServeRequest, tag: object = None) -> int:
@@ -151,7 +162,10 @@ class PagedDecodeStream:
                 first = self._join_lstm(slot, request, toks, match, held)
             else:
                 first = self._join_attn(request, toks, match, held)
-        except PoolExhausted:
+        except (PoolExhausted, HeadFault):
+            # same rollback either way: the pool cannot back the prompt OR
+            # the head faulted mid-join — every page ref this join took is
+            # released and the stream is exactly as it was
             for pg in held:
                 self.pool.release(pg)
             raise
@@ -285,30 +299,43 @@ class PagedDecodeStream:
         eng = self.engine
         tok = jnp.asarray(self.tok)
         pos = jnp.asarray(self.pos)
+        # compute into locals and commit (cache / pool tensors, PRNG) only
+        # after the guard — a step fault advances nothing, so a retry
+        # re-runs the identical step (pages grown by _ensure_pages stay in
+        # their chains and are simply reused, same as the PoolExhausted
+        # retry contract)
+        key = cache = new_k = new_v = store = None
         if self.family == "lstm":
             # the SAME cached dense step DecodeStream uses — the paged LSTM
             # path adds zero step executables by construction
             if self.sampled:
                 fn = eng._sample_step(self.head, self.temperature, self.top_p)
-                self._key, ki = jax.random.split(self._key)
-                nxt, _, self.cache = fn(eng.params, ki, tok, self.cache, pos)
+                key, ki = jax.random.split(self._key)
+                nxt, _, cache = fn(eng.params, ki, tok, self.cache, pos)
             else:
                 fn = eng._greedy_step(self.head)
-                nxt, _, self.cache = fn(eng.params, tok, self.cache, pos)
+                nxt, _, cache = fn(eng.params, tok, self.cache, pos)
         else:
             store = self.pool.store
             table = jnp.asarray(self.table)
             if self.sampled:
                 fn = eng._paged_sample_step(self.head, self.temperature,
                                             self.top_p)
-                self._key, ki = jax.random.split(self._key)
-                nxt, _, store.k, store.v = fn(eng.params, ki, tok, store.k,
-                                              store.v, table, pos)
+                key, ki = jax.random.split(self._key)
+                nxt, _, new_k, new_v = fn(eng.params, ki, tok, store.k,
+                                          store.v, table, pos)
             else:
                 fn = eng._paged_greedy_step(self.head)
-                nxt, _, store.k, store.v = fn(eng.params, tok, store.k,
-                                              store.v, table, pos)
-        nxt = np.asarray(nxt)
+                nxt, _, new_k, new_v = fn(eng.params, tok, store.k,
+                                          store.v, table, pos)
+        nxt = guard_tokens(self.fault_injector, "step", self.head_name,
+                           nxt, self.vocab, rows=idx)
+        if self.sampled:
+            self._key = key
+        if self.family == "lstm":
+            self.cache = cache
+        else:
+            store.k, store.v = new_k, new_v
         for i in idx:
             s = self.slots[i]
             t = int(nxt[i])

@@ -49,6 +49,12 @@ class ServeRequest:
                        changes output, only speed.
     ``draft_len``      tokens drafted per verify round for this request;
                        None → the policy's default.
+    ``timeout_s``      per-request wall budget on the scheduler's clock,
+                       submission to last token; None (default) = no
+                       timeout. Expired requests terminate as a typed
+                       ``AdmissionRejected(stage="timeout")`` carrying the
+                       partial decode — independent of the latency tier's
+                       deadline, which is a PREEMPTION signal.
     """
 
     prompt: np.ndarray
@@ -62,6 +68,7 @@ class ServeRequest:
     head: Optional[str] = None
     draft_head: Optional[str] = None
     draft_len: Optional[int] = None
+    timeout_s: Optional[float] = None
 
     def __post_init__(self):
         # validate EVERYTHING the decode loop consumes up front: a bad k or
@@ -82,6 +89,10 @@ class ServeRequest:
         if self.draft_len is not None and self.draft_len < 1:
             raise ValueError(
                 f"ServeRequest.draft_len must be >= 1, got {self.draft_len}")
+        if self.timeout_s is not None and self.timeout_s <= 0:
+            raise ValueError(
+                f"ServeRequest.timeout_s must be > 0 or None, got "
+                f"{self.timeout_s}")
         if self.draft_head is not None and self.draft_head == self.head:
             raise ValueError(
                 f"ServeRequest.draft_head must differ from the verify head "

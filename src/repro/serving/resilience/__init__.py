@@ -1,0 +1,36 @@
+"""Resilience layer: fault injection, circuit breakers, watchdogs.
+
+The serving stack's degrade-gracefully machinery (see README
+"Resilience & graceful degradation"):
+
+  * faults.py   — ``FaultInjector`` (deterministic chaos: seeded +
+                  injectable ``LogicalClock``), typed ``HeadFault``, and
+                  the always-on token-output guards every stream runs.
+  * breaker.py  — per-head ``CircuitBreaker`` (closed/open/half-open)
+                  that trips unhealthy heads out of the routing and
+                  admission catalog via ``head_eligible``.
+  * watchdog.py — ``StreamWatchdog`` per-request progress/stall detector;
+                  request deadlines (``ServeRequest.timeout_s``) are
+                  enforced by the scheduler alongside it.
+
+``ContinuousScheduler`` threads all three through its tick loop: faults
+retry with bounded backoff, then re-route to the cheapest healthy head
+clearing the request's ``accuracy_floor`` (exact as last resort) with
+full KV-page rollback, else terminate as ``AdmissionRejected`` with
+``stage="fault"`` — the server degrades, it does not die.
+"""
+from repro.serving.resilience.breaker import (CLOSED, HALF_OPEN, OPEN,
+                                              CircuitBreaker)
+from repro.serving.resilience.faults import (KINDS, SITES, FaultInjector,
+                                             FaultSpec, HeadFault,
+                                             LogicalClock, guard_tokens,
+                                             invalid_token_rows)
+from repro.serving.resilience.watchdog import StreamWatchdog
+
+__all__ = [
+    "SITES", "KINDS",
+    "LogicalClock", "HeadFault", "FaultSpec", "FaultInjector",
+    "guard_tokens", "invalid_token_rows",
+    "CLOSED", "OPEN", "HALF_OPEN", "CircuitBreaker",
+    "StreamWatchdog",
+]

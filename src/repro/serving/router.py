@@ -60,7 +60,14 @@ def head_eligible(name: str, meta: dict, request: ServeRequest,
     head's candidate list may not contain k valid words), sampling support,
     and the per-device memory fit ``memory_bytes / n_shards``. Keeping it
     here means a fix to eligibility can never make ``CostAwarePolicy`` and
-    ``BudgetAdmission`` silently disagree."""
+    ``BudgetAdmission`` silently disagree.
+
+    A ``breaker_open`` stamp in ``meta`` vetoes the head outright — the
+    scheduler stamps catalog copies for heads whose circuit breaker is
+    open (see serving/resilience), and routing/admission/spec policies all
+    inherit the veto through this one test."""
+    if meta.get("breaker_open"):
+        return False
     floor = request.accuracy_floor
     if wide_k is not None and request.k > wide_k:
         floor = max(floor, 1.0)

@@ -9,10 +9,12 @@ from repro.serving.scheduler.queue import (TIER_DEADLINES, TIER_PRIORITY,
                                            RequestQueue, SchedulerLoad,
                                            head_flops, head_flops_modeled,
                                            tier_priority)
-from repro.serving.scheduler.scheduler import ContinuousScheduler
+from repro.serving.scheduler.scheduler import (ContinuousScheduler,
+                                               SchedulerStalled)
 from repro.serving.scheduler.stats import ServerStats
 
-__all__ = ["ContinuousScheduler", "ServerStats", "RequestQueue",
+__all__ = ["ContinuousScheduler", "SchedulerStalled", "ServerStats",
+           "RequestQueue",
            "QueuedRequest", "AdmissionPolicy", "AdmissionDecision",
            "AdmissionRejected", "AcceptAll", "BudgetAdmission",
            "SchedulerLoad", "TIER_DEADLINES", "TIER_PRIORITY",

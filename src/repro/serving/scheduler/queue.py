@@ -72,6 +72,11 @@ class QueuedRequest:
     # length. ``draft is None`` = plain decode.
     draft: Optional[str] = None
     draft_len: int = 0
+    # resilience bookkeeping (serving/resilience): transient-fault retries
+    # consumed so far, and every head this request already faulted on —
+    # fallback routing never re-offers one of these
+    retries: int = 0
+    tried_heads: set = field(default_factory=set)
 
     @property
     def tier(self) -> str:
@@ -114,6 +119,13 @@ class RequestQueue:
 
     def remove(self, qr: QueuedRequest) -> None:
         self._items.remove(qr)
+
+    def requeue(self, qr: QueuedRequest) -> QueuedRequest:
+        """Put a previously-admitted request back WITHOUT re-stamping: its
+        arrival and deadline are properties of the submission, not of the
+        fault/fallback hop that sent it back here."""
+        self._items.append(qr)
+        return qr
 
     def __len__(self) -> int:
         return len(self._items)
@@ -164,11 +176,14 @@ class AdmissionDecision:
 class AdmissionRejected:
     """Typed terminal result for a request the scheduler did not complete.
 
-    ``stage`` is "admission" (refused at submit — never decoded) or
+    ``stage`` is "admission" (refused at submit — never decoded),
     "preempt" (evicted mid-decode; ``tokens`` then carries the partial
-    decode and ``head`` the head that served it). Sits alongside
-    ``ServeResult`` in the scheduler's result list so callers switch on
-    type, not on sentinel values."""
+    decode and ``head`` the head that served it), "fault" (every retry and
+    fallback head exhausted — ``tokens`` carries whatever decoded before
+    the terminal fault), or "timeout" (``ServeRequest.timeout_s`` elapsed;
+    partial tokens attached the same way). Sits alongside ``ServeResult``
+    in the scheduler's result list so callers switch on type, not on
+    sentinel values."""
 
     request: ServeRequest = field(repr=False)
     reason: str = ""

@@ -24,6 +24,18 @@ then:
 ``drain()`` runs ticks until the system is empty and returns results in
 submission order; ``serve(requests)`` is submit-all + drain, the drop-in
 continuous counterpart to ``engine.serve_batch``.
+
+RESILIENCE (``repro.serving.resilience``): with a ``fault_injector`` /
+``breaker`` / ``watchdog`` attached, the tick additionally absorbs typed
+``HeadFault``s from the stream guards — transient faults retry in place
+with bounded tick-backoff (stream state never advanced, so greedy retries
+are bit-identical), permanent or retry-exhausted faults offload the
+stream (full KV-page rollback via the same eviction machinery preemption
+uses) and re-route each request to the cheapest healthy head clearing its
+``accuracy_floor`` (exact as last resort), else terminate it as a typed
+``AdmissionRejected(stage="fault")`` with partial tokens. The server
+degrades; it never crashes, never leaks a page, never loops forever
+(``drain`` raises typed ``SchedulerStalled``).
 """
 from __future__ import annotations
 
@@ -35,11 +47,28 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.serving.engine import DecodeEngine, DecodeStream
 from repro.serving.kvpool.pool import PoolExhausted
 from repro.serving.request import ServeRequest, ServeResult
+from repro.serving.resilience.breaker import OPEN
+from repro.serving.resilience.faults import HeadFault
+from repro.serving.router import DEFAULT_ACCURACY, head_eligible
 from repro.serving.scheduler.queue import (AcceptAll, AdmissionPolicy,
                                            AdmissionRejected, QueuedRequest,
                                            RequestQueue, SchedulerLoad,
-                                           head_flops, tier_priority)
+                                           head_flops, head_flops_modeled,
+                                           tier_priority)
 from repro.serving.scheduler.stats import ServerStats
+
+
+class SchedulerStalled(RuntimeError):
+    """``drain()`` could not finish: nothing progressed for several ticks
+    (queued work that can never place) or the ``max_ticks`` safety valve
+    fired. Carries the stuck request ids and the final ``ServerStats``
+    snapshot so the operator sees WHAT wedged, not just that it did."""
+
+    def __init__(self, message: str, rids: Sequence[int] = (),
+                 stats: Optional[dict] = None):
+        super().__init__(message)
+        self.rids = tuple(rids)
+        self.stats = stats
 
 
 class ContinuousScheduler:
@@ -78,6 +107,18 @@ class ContinuousScheduler:
                     pool, the ``draft_len − 1`` rollback pages a round can
                     transiently write; a DOWNGRADE drops the spec
                     assignment along with the routed head.
+    ``fault_injector`` optional ``resilience.FaultInjector`` armed on every
+                    stream the scheduler opens (chaos testing; the guards
+                    run regardless and catch honest degeneration too).
+    ``breaker``     optional ``resilience.CircuitBreaker``: fault signals
+                    feed it, open heads drop out of routing/admission/spec
+                    (``head_eligible``'s ``breaker_open`` stamp) and their
+                    running streams are offloaded to fallbacks.
+    ``watchdog``    optional ``resilience.StreamWatchdog``: per-request
+                    progress tracking; stalled requests are evicted and
+                    re-routed like faulted ones.
+    ``max_retries`` transient-fault retries per request before fallback
+                    re-routing (exponential tick-backoff, capped at 8).
     """
 
     def __init__(self, engine: DecodeEngine, policy=None,
@@ -85,9 +126,12 @@ class ContinuousScheduler:
                  max_slots: int = 4, max_streams: int = 8,
                  deadlines: Optional[Dict[str, float]] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 kv_pool=None, spec=None):
+                 kv_pool=None, spec=None, fault_injector=None,
+                 breaker=None, watchdog=None, max_retries: int = 2):
         if max_slots < 1 or max_streams < 1:
             raise ValueError("max_slots and max_streams must be >= 1")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0: {max_retries}")
         self.engine = engine
         self.kv_pool = kv_pool
         self.spec = spec
@@ -105,6 +149,24 @@ class ContinuousScheduler:
         self._next_rid = 0          # monotonic even after pop_results()
         self._inflight: Dict[int, QueuedRequest] = {}   # placed, not finished
         self._catalog: Dict[str, dict] = {}
+        # -- resilience wiring (all optional; zero cost when absent) ---------
+        self.fault_injector = fault_injector
+        self.breaker = breaker
+        self.watchdog = watchdog
+        self.max_retries = int(max_retries)
+        self.fault_rids: set = set()    # rids any fault/retry/fallback touched
+        self._retry_at: Dict[tuple, int] = {}   # stream sig -> resume tick
+        self._fail_count: Dict[tuple, int] = {}  # sig -> consecutive faults
+        if breaker is not None:
+            # chain the breaker's transition hook through ServerStats so
+            # trips/half-opens/closes are observable in every snapshot
+            user_cb = breaker.on_transition
+
+            def _on_transition(head, old, new, _user=user_cb):
+                self.stats.record_breaker(head, old, new)
+                if _user is not None:
+                    _user(head, old, new)
+            breaker.on_transition = _on_transition
 
     # -- catalog / routing ---------------------------------------------------
     def _default_name(self) -> str:
@@ -116,6 +178,22 @@ class ContinuousScheduler:
             self._catalog.update(self.engine.head_catalog(missing))
         return self._catalog
 
+    def _health_view(self, catalog: Dict[str, dict]) -> Dict[str, dict]:
+        """Catalog filtered through the circuit breaker: heads whose
+        breaker is open get a ``breaker_open`` stamp on a COPY of their
+        meta, which ``head_eligible`` (routing + admission + spec policy)
+        treats as a veto. ``allow()`` doubles as the half-open transition
+        probe — an open head past its cooldown un-stamps itself here."""
+        if self.breaker is None:
+            return catalog
+        out = {}
+        for name, meta in catalog.items():
+            if not self.breaker.allow(name):
+                meta = dict(meta)
+                meta["breaker_open"] = True
+            out[name] = meta
+        return out
+
     def _route(self, request: ServeRequest) -> Optional[str]:
         """Explicit head > policy > engine default (``None``)."""
         if request.head is not None:
@@ -124,7 +202,7 @@ class ContinuousScheduler:
             return None
         catalog = self._ensure_catalog(
             tuple(getattr(self.policy, "candidates", ())))
-        return self.policy.route(request, catalog)
+        return self.policy.route(request, self._health_view(catalog))
 
     def _load(self) -> SchedulerLoad:
         running = sum(qr.cost for qr in self._inflight.values())
@@ -189,6 +267,7 @@ class ContinuousScheduler:
         catalog = {n: self._catalog[n] for n in names if n in self._catalog}
         if routed is None:
             catalog[name] = self.engine.head.describe()
+        catalog = self._health_view(catalog)
         # provisional spec assignment BEFORE admission, so admission prices
         # the draft head's extra per-step flops and the rollback pages; a
         # downgrade drops it again below
@@ -281,16 +360,144 @@ class ContinuousScheduler:
             stream = self.engine.open_stream(
                 head=qr.head, width=self.max_slots,
                 temperature=req.temperature, top_p=req.top_p, seed=req.seed)
+        stream.fault_injector = self.fault_injector
         self._streams[sig] = stream
         return stream
+
+    # -- resilience helpers ---------------------------------------------------
+    @staticmethod
+    def _stream_heads(stream) -> tuple:
+        """The registry head name(s) a stream's health hangs on: (draft,
+        verify) for spec lanes, the serving head otherwise."""
+        if hasattr(stream, "draft_name"):
+            return (stream.draft_name, stream.verify_name)
+        return (stream.head_name,)
+
+    def _fallback_head(self, qr: QueuedRequest) -> Optional[str]:
+        """Cheapest healthy head this request can still run on: policy
+        candidates + everything cataloged + "exact" (the last resort —
+        by flops it naturally ranks last), minus heads the request already
+        faulted on and heads the breaker has open, filtered through the
+        same ``head_eligible`` test routing and admission share."""
+        cand = tuple(getattr(self.policy, "candidates", ())) \
+            if self.policy is not None else ()
+        names = tuple(dict.fromkeys(
+            cand + tuple(self._catalog) + ("exact",)))
+        try:
+            self._ensure_catalog(names)
+        except Exception:
+            names = tuple(n for n in names if n in self._catalog)
+        catalog = self._health_view(
+            {n: self._catalog[n] for n in names if n in self._catalog})
+        acc = {**DEFAULT_ACCURACY,
+               **(getattr(self.policy, "accuracy", None) or {})}
+        best = None
+        for n, meta in catalog.items():
+            if n in qr.tried_heads:
+                continue
+            if not head_eligible(n, meta, qr.request, acc):
+                continue
+            f = head_flops(catalog, n) if head_flops_modeled(catalog, n) \
+                else math.inf
+            if best is None or f < best[0]:
+                best = (f, n)
+        return None if best is None else best[1]
+
+    def _redispatch(self, qr: QueuedRequest, failed_head: str,
+                    partial=None) -> int:
+        """One offloaded request after a permanent/exhausted fault or
+        stall: strip a faulting DRAFT and requeue plain (emitted tokens
+        were always the verify head's — degrading costs nothing), else
+        re-route to the cheapest healthy head, else terminate typed.
+        Returns 1 when the request reached a terminal state."""
+        self.fault_rids.add(qr.id)
+        self._inflight.pop(qr.id, None)
+        if self.watchdog is not None:
+            self.watchdog.forget(qr.id)
+        if qr.draft is not None and failed_head == qr.draft:
+            qr.draft, qr.draft_len = None, 0
+            qr.retries = 0
+            self.stats.record_spec_degraded()
+            self.queue.requeue(qr)
+            return 0
+        qr.tried_heads.add(failed_head)
+        fallback = self._fallback_head(qr)
+        if fallback is not None:
+            self.stats.record_fallback(failed_head, fallback)
+            qr.head = fallback
+            qr.cost = head_flops(self._catalog, fallback)
+            qr.draft, qr.draft_len = None, 0
+            qr.retries = 0
+            self.queue.requeue(qr)
+            return 0
+        self._results[qr.id] = AdmissionRejected(
+            request=qr.request, stage="fault", head=failed_head,
+            tokens=partial,
+            reason=f"head {failed_head!r} faulted and no healthy head "
+                   f"clears accuracy_floor={qr.request.accuracy_floor} "
+                   f"(tried {sorted(qr.tried_heads)})")
+        self.stats.record_faulted()
+        return 1
+
+    def _offload_stream(self, sig: tuple, stream, failed_head: str) -> int:
+        """Evict every occupant of a sick stream (full KV-page rollback —
+        ``evict`` releases page chains exactly like preemption) and
+        re-route each through ``_redispatch``."""
+        terminal = 0
+        for slot, tag in list(stream.occupied()):
+            _, _, partial = stream.evict(slot)
+            terminal += self._redispatch(tag, failed_head, partial=partial)
+        self._retry_at.pop(sig, None)
+        self._fail_count.pop(sig, None)
+        return terminal
+
+    def _on_stream_fault(self, sig: tuple, stream, e: HeadFault) -> int:
+        """Typed fault out of a stream's step: transient faults retry in
+        place with bounded exponential tick-backoff (the guard fired
+        BEFORE any state committed, so the retry re-runs the identical
+        step); permanent or retry-exhausted faults offload the stream and
+        re-route its requests. Either way the breaker hears about it."""
+        self.stats.record_fault(e.kind, e.transient)
+        for _, tag in stream.occupied():
+            self.fault_rids.add(tag.id)
+        if self.breaker is not None:
+            self.breaker.record_failure(e.head, kind=e.kind,
+                                        hard=not e.transient)
+        tripped = self.breaker is not None and \
+            self.breaker.state(e.head) == OPEN
+        if e.transient and not tripped:
+            fails = self._fail_count.get(sig, 0) + 1
+            self._fail_count[sig] = fails
+            if fails <= self.max_retries:
+                self.stats.record_retry()
+                self._retry_at[sig] = self.stats.ticks + min(
+                    2 ** (fails - 1), 8)
+                return 0
+        terminal = self._offload_stream(sig, stream, e.head)
+        if tripped:
+            # the breaker took the whole HEAD out, not just this stream:
+            # offload every other lane it serves (or drafts for) too
+            for other_sig, other in list(self._streams.items()):
+                if other is stream or e.head not in \
+                        self._stream_heads(other):
+                    continue
+                if other.n_active:
+                    terminal += self._offload_stream(other_sig, other,
+                                                     e.head)
+        return terminal
 
     # -- the tick ------------------------------------------------------------
     def step(self) -> int:
         """One scheduler tick. Returns the number of requests that reached
-        a terminal state (completed or preempted) this tick."""
+        a terminal state (completed, preempted, faulted or timed out) this
+        tick."""
         self.stats.ticks += 1
         terminal = 0
         pool_blocked = False    # a PoolExhausted fired somewhere this tick
+        # 0. injected tick delays (chaos): advances the shared logical
+        #    clock, so deadline/timeout machinery feels the lost time
+        if self.fault_injector is not None:
+            self.fault_injector.on_tick()
         # 1. place waiting requests — priority-ordered, FIFO within a tier.
         #    Plain FIFO would hand a preemption-freed slot to the next
         #    lower-tier request in line, which stage 3 would immediately
@@ -299,12 +506,56 @@ class ContinuousScheduler:
         #    realtime arrival. Priority placement gives the slot to the
         #    waiter that justified the eviction.
         for qr in sorted(self.queue, key=lambda q: (q.priority, q.id)):
+            if self.breaker is not None:
+                # tripped VERIFY/serving head: re-route before placing (a
+                # healthy stand-in beats waiting out the cooldown); tripped
+                # DRAFT head: strip the draft, decode plain
+                if qr.draft is not None and \
+                        not self.breaker.allow(qr.draft):
+                    qr.draft, qr.draft_len = None, 0
+                    self.stats.record_spec_degraded()
+                    self.fault_rids.add(qr.id)
+                if not self.breaker.allow(qr.head or self._default_name()):
+                    fallback = self._fallback_head(qr)
+                    if fallback is not None and fallback != qr.head:
+                        self.stats.record_fallback(qr.head, fallback)
+                        self.fault_rids.add(qr.id)
+                        qr.head = fallback
+                        qr.cost = head_flops(self._catalog, fallback)
+                        qr.draft, qr.draft_len = None, 0
+                    else:
+                        continue    # queued until the breaker half-opens
+            sig = self._sig(qr)
+            if self._retry_at.get(sig, 0) > self.stats.ticks:
+                continue            # transient-fault backoff window
             stream = self._stream_for(qr)
             if stream is None:
                 continue
             t0 = time.perf_counter()
             try:
                 stream.join(qr.request, tag=qr)
+            except HeadFault as e:
+                # the guard fired BEFORE any stream state mutated (pages
+                # rolled back, PRNG unconsumed), so the request simply
+                # stays queued: transient faults back off and retry,
+                # anything else re-routes or terminates typed
+                self.stats.record_fault(e.kind, e.transient)
+                self.fault_rids.add(qr.id)
+                if self.breaker is not None:
+                    self.breaker.record_failure(e.head, kind=e.kind,
+                                                hard=not e.transient)
+                tripped = self.breaker is not None and \
+                    self.breaker.state(e.head) == OPEN
+                if e.transient and not tripped and \
+                        qr.retries < self.max_retries:
+                    qr.retries += 1
+                    self.stats.record_retry()
+                    self._retry_at[sig] = self.stats.ticks + min(
+                        2 ** (qr.retries - 1), 8)
+                else:
+                    self.queue.remove(qr)
+                    terminal += self._redispatch(qr, e.head)
+                continue
             except PoolExhausted as e:
                 # join rolled back every page it took; the request stays
                 # queued and stage 3 applies pool pressure. With nothing
@@ -323,6 +574,7 @@ class ContinuousScheduler:
                 continue
             dt = time.perf_counter() - t0
             self.queue.remove(qr)
+            self._retry_at.pop(sig, None)
             now = self.clock()
             qr.placed_at = now
             self._inflight[qr.id] = qr
@@ -333,10 +585,18 @@ class ContinuousScheduler:
         #    of tokens (1..draft_len per slot), so its token credit is the
         #    emitted-counter delta, not n_active, and the same delta feeds
         #    the server-wide speculative telemetry.
-        for stream in list(self._streams.values()):
+        for sig, stream in list(self._streams.items()):
             spec_before = stream.spec_counters() \
                 if hasattr(stream, "spec_counters") else None
-            if stream.n_active:
+            skip = self._retry_at.get(sig, 0) > self.stats.ticks
+            if not skip and stream.n_active and \
+                    self.fault_injector is not None:
+                # injected stall: the stream makes no progress this tick —
+                # from the outside exactly what a hung device looks like;
+                # the watchdog is what DETECTS it
+                skip = any(self.fault_injector.stalled(h)
+                           for h in self._stream_heads(stream))
+            if stream.n_active and not skip:
                 n_tok = stream.n_active
                 t0 = time.perf_counter()
                 try:
@@ -347,8 +607,20 @@ class ContinuousScheduler:
                     # and the next tick retries the identical step
                     pool_blocked = True
                     finished = stream.pop_finished()
+                except HeadFault as e:
+                    # guard fired before any state committed: retry with
+                    # backoff, or offload + re-route (full page rollback)
+                    terminal += self._on_stream_fault(sig, stream, e)
+                    finished = stream.pop_finished()
                 else:
                     dt = time.perf_counter() - t0
+                    self._fail_count.pop(sig, None)
+                    if self.breaker is not None:
+                        for h in self._stream_heads(stream):
+                            self.breaker.record_success(h)
+                        if self.breaker.latency_spike_s is not None:
+                            self.breaker.record_latency(stream.head_name,
+                                                        dt)
                     if spec_before is not None:
                         after = stream.spec_counters()
                         delta = {k: after[k] - spec_before[k]
@@ -364,6 +636,8 @@ class ContinuousScheduler:
                     tokens=tokens, head=stream.head_name, request=request,
                     group_size=stream.width)
                 self._inflight.pop(qr.id, None)
+                if self.watchdog is not None:
+                    self.watchdog.forget(qr.id)
                 self.stats.record_completion(
                     stream.head_name, now - qr.arrival,
                     on_time=now <= qr.deadline)
@@ -456,11 +730,71 @@ class ContinuousScheduler:
                 self._pool_stalled_ticks = 0
         else:
             self._pool_stalled_ticks = 0
+        # 4. watchdog + per-request timeouts, on stage 3's ``now`` (no
+        #    extra clock reads — a fake-clock test ticks identically
+        #    whether or not resilience is wired)
+        if self.watchdog is not None and self.watchdog.armed:
+            for stream in self._streams.values():
+                for slot, tag in stream.occupied():
+                    self.watchdog.observe(
+                        tag.id, len(stream.slots[slot].tokens), now)
+            for rid in self.watchdog.stalled(now):
+                qr = self._inflight.get(rid)
+                found = self._find_slot(rid)
+                if qr is None or found is None:
+                    self.watchdog.forget(rid)
+                    continue
+                stream, slot = found
+                _, _, partial = stream.evict(slot)
+                self.stats.record_stall()
+                head = stream.head_name
+                if self.breaker is not None:
+                    self.breaker.record_failure(head, kind="stall")
+                terminal += self._redispatch(qr, head, partial=partial)
+        timed_out = [qr for qr in self._inflight.values()
+                     if qr.request.timeout_s is not None
+                     and now - qr.arrival > qr.request.timeout_s]
+        for qr in timed_out:
+            found = self._find_slot(qr.id)
+            partial = None
+            head = qr.head
+            if found is not None:
+                stream, slot = found
+                _, _, partial = stream.evict(slot)
+                head = stream.head_name
+            self._inflight.pop(qr.id, None)
+            if self.watchdog is not None:
+                self.watchdog.forget(qr.id)
+            self._results[qr.id] = AdmissionRejected(
+                request=qr.request, stage="timeout", head=head,
+                tokens=partial,
+                reason=f"timeout_s={qr.request.timeout_s} elapsed "
+                       f"({now - qr.arrival:.3f}s since submission)")
+            self.stats.record_timeout()
+            terminal += 1
+        for qr in list(self.queue):
+            if qr.request.timeout_s is not None \
+                    and now - qr.arrival > qr.request.timeout_s:
+                self.queue.remove(qr)
+                self._results[qr.id] = AdmissionRejected(
+                    request=qr.request, stage="timeout", head=qr.head,
+                    reason=f"timeout_s={qr.request.timeout_s} elapsed "
+                           f"while queued")
+                self.stats.record_timeout()
+                terminal += 1
         if self.kv_pool is not None:
             self.stats.observe_pool(self.kv_pool.telemetry(),
                                     stalled=pool_blocked)
         self.stats.observe_queue(len(self.queue))
         return terminal
+
+    def _find_slot(self, rid: int):
+        """(stream, slot) currently decoding result id ``rid``, or None."""
+        for stream in self._streams.values():
+            for slot, tag in stream.occupied():
+                if tag.id == rid:
+                    return stream, slot
+        return None
 
     # -- draining ------------------------------------------------------------
     @property
@@ -468,25 +802,61 @@ class ContinuousScheduler:
         return bool(len(self.queue)) or any(
             not s.idle for s in self._streams.values())
 
+    def _stuck_rids(self) -> List[int]:
+        return sorted({qr.id for qr in self.queue}
+                      | set(self._inflight.keys()))
+
     def drain(self, max_ticks: Optional[int] = None) -> List[object]:
         """Tick until queue and streams are empty; results in submission
-        order (``ServeResult`` | ``AdmissionRejected``)."""
+        order (``ServeResult`` | ``AdmissionRejected``). Raises typed
+        ``SchedulerStalled`` — carrying the stuck request ids and a final
+        stats snapshot — when nothing progresses for several ticks or the
+        ``max_ticks`` safety valve fires: a wedged server surfaces as a
+        diagnosable error, never an infinite loop."""
         ticks = 0
         stalled = 0
         while self.busy:
             before = len(self._results)
-            active = any(s.n_active for s in self._streams.values())
+            tok0 = self.stats.tokens
+            pool0 = self.stats.pool_stalled_ticks
             self.step()
             ticks += 1
-            progressed = active or len(self._results) > before
-            stalled = 0 if progressed else stalled + 1
+            # REAL progress is tokens decoded or results produced — a
+            # stream full of occupied-but-frozen slots (an injected stall,
+            # a wedged device) must not read as healthy. States that
+            # legitimately idle a tick are PATIENCE, each bounded by a
+            # mechanism that eventually produces progress or a typed
+            # result: a transient-fault backoff window, a pool-pressure
+            # tick (stage 3b escalates to a forced eviction), an open
+            # breaker a queued request waits out (cooldown → half-open
+            # probe), and an armed watchdog over in-flight work (its
+            # stall timeout evicts to fallback/typed-reject).
+            backing_off = any(t > self.stats.ticks
+                              for t in self._retry_at.values())
+            waiting = backing_off \
+                or self.stats.pool_stalled_ticks > pool0 \
+                or (self.breaker is not None and len(self.queue) > 0
+                    and bool(self.breaker.open_heads())) \
+                or (self.watchdog is not None and self.watchdog.armed
+                    and bool(self._inflight))
+            progressed = len(self._results) > before \
+                or self.stats.tokens > tok0
+            stalled = 0 if progressed or waiting else stalled + 1
             if stalled > 2:
-                raise RuntimeError(
-                    f"scheduler stalled: {len(self.queue)} queued requests "
-                    f"cannot be placed (max_streams={self.max_streams} "
-                    f"busy with other signatures and nothing preemptable)")
-            if max_ticks is not None and ticks >= max_ticks:
-                break
+                raise SchedulerStalled(
+                    f"scheduler stalled: {len(self.queue)} queued + "
+                    f"{len(self._inflight)} in-flight request(s) made no "
+                    f"progress for {stalled} ticks "
+                    f"(max_streams={self.max_streams} busy with other "
+                    f"signatures, nothing preemptable, or every fallback "
+                    f"head tripped)", rids=self._stuck_rids(),
+                    stats=self.stats.snapshot())
+            if max_ticks is not None and ticks >= max_ticks and self.busy:
+                raise SchedulerStalled(
+                    f"drain exceeded max_ticks={max_ticks} with "
+                    f"{len(self.queue)} queued + {len(self._inflight)} "
+                    f"in-flight request(s) outstanding",
+                    rids=self._stuck_rids(), stats=self.stats.snapshot())
         return self.results()
 
     def results(self) -> List[object]:

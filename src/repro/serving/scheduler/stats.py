@@ -24,8 +24,8 @@ class ServerStats:
 
     Admission funnel: ``submitted = admitted + rejected`` (downgrades are
     admitted; ``downgraded`` counts how many of those were rerouted).
-    Completion funnel: every admitted request ends ``completed`` or
-    ``preempted``. ``latency`` tracks submission→last-token seconds for
+    Completion funnel: every admitted request ends ``completed``,
+    ``preempted``, ``faulted`` or ``timed_out``. ``latency`` tracks submission→last-token seconds for
     completed requests; ``queue_wait`` tracks submission→slot seconds for
     everything that got a slot."""
 
@@ -64,6 +64,26 @@ class ServerStats:
         self.spec_emitted = 0            # tokens emitted by spec streams
         self.spec_verify_queries = 0     # verify-head queries (padded n_max·W)
         self.spec_verify_flops = 0.0     # modeled flops of those queries
+        # resilience funnel (repro.serving.resilience): all zero until a
+        # fault, retry, breaker transition, stall or timeout happens. Every
+        # faulted request still ends completed / preempted / faulted /
+        # timed_out — the funnel stays closed under chaos.
+        self.faults_transient = 0        # retryable HeadFaults absorbed
+        self.faults_permanent = 0        # hard HeadFaults (immediate re-route)
+        self.fault_kinds: Dict[str, int] = {}
+        self.retries = 0                 # bounded-backoff retry attempts
+        self.fallbacks = 0               # requests re-routed off a sick head
+        self.faulted = 0                 # requests terminated stage="fault"
+        self.timed_out = 0               # requests terminated stage="timeout"
+        self.watchdog_stalls = 0         # stalled streams the watchdog caught
+        self.spec_degraded = 0           # spec requests stripped to plain
+        self.breaker_trips = 0           # closed/half-open -> open
+        self.breaker_half_opens = 0      # open -> half-open (cooldown probe)
+        self.breaker_closes = 0          # half-open -> closed (recovery)
+        self.breaker_states: Dict[str, str] = {}
+        # bounded transition log: (tick, head, old, new), newest last
+        self.breaker_transitions = []
+        self._resilience_touched = False
 
     # -- update hooks (called by ContinuousScheduler) ------------------------
     def _head(self, name: str) -> Dict[str, float]:
@@ -101,6 +121,61 @@ class ServerStats:
         self.spec_emitted += int(emitted)
         self.spec_verify_queries += int(verify_queries)
         self.spec_verify_flops += float(verify_flops)
+
+    def record_fault(self, kind: str, transient: bool) -> None:
+        """One typed ``HeadFault`` the scheduler absorbed."""
+        self._resilience_touched = True
+        if transient:
+            self.faults_transient += 1
+        else:
+            self.faults_permanent += 1
+        self.fault_kinds[kind] = self.fault_kinds.get(kind, 0) + 1
+
+    def record_retry(self) -> None:
+        self._resilience_touched = True
+        self.retries += 1
+
+    def record_fallback(self, frm: Optional[str], to: Optional[str]) -> None:
+        """One request re-routed off a faulting/tripped head."""
+        self._resilience_touched = True
+        self.fallbacks += 1
+
+    def record_faulted(self) -> None:
+        """One request terminated ``stage="fault"`` (retries + fallbacks
+        exhausted)."""
+        self._resilience_touched = True
+        self.faulted += 1
+
+    def record_timeout(self) -> None:
+        """One request terminated ``stage="timeout"``."""
+        self._resilience_touched = True
+        self.timed_out += 1
+
+    def record_stall(self) -> None:
+        """One stalled stream/request the watchdog caught."""
+        self._resilience_touched = True
+        self.watchdog_stalls += 1
+
+    def record_spec_degraded(self) -> None:
+        """One spec request stripped of its draft (degraded to plain)."""
+        self._resilience_touched = True
+        self.spec_degraded += 1
+
+    def record_breaker(self, head: str, old: str, new: str,
+                       keep: int = 64) -> None:
+        """One circuit-breaker transition (the breaker's ``on_transition``
+        hook). The transition log is bounded at ``keep`` entries."""
+        self._resilience_touched = True
+        if new == "open":
+            self.breaker_trips += 1
+        elif new == "half-open":
+            self.breaker_half_opens += 1
+        elif old == "half-open" and new == "closed":
+            self.breaker_closes += 1
+        self.breaker_states[head] = new
+        self.breaker_transitions.append((self.ticks, head, old, new))
+        if len(self.breaker_transitions) > keep:
+            del self.breaker_transitions[:-keep]
 
     def observe_queue(self, depth: int) -> None:
         self.queue_depth = int(depth)
@@ -159,6 +234,23 @@ class ServerStats:
                     if self.spec_drafted else math.nan),
                 "verify_queries": self.spec_verify_queries,
                 "verify_flops": self.spec_verify_flops,
+            },
+            "resilience": None if not self._resilience_touched else {
+                "faults_transient": self.faults_transient,
+                "faults_permanent": self.faults_permanent,
+                "fault_kinds": dict(sorted(self.fault_kinds.items())),
+                "retries": self.retries,
+                "fallbacks": self.fallbacks,
+                "faulted": self.faulted,
+                "timed_out": self.timed_out,
+                "watchdog_stalls": self.watchdog_stalls,
+                "spec_degraded": self.spec_degraded,
+                "breaker_trips": self.breaker_trips,
+                "breaker_half_opens": self.breaker_half_opens,
+                "breaker_closes": self.breaker_closes,
+                "breaker_states": dict(sorted(self.breaker_states.items())),
+                "breaker_transitions": [
+                    list(t) for t in self.breaker_transitions],
             },
             "pool": None if self.pool is None else {
                 **self.pool,

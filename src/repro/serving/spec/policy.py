@@ -108,6 +108,10 @@ class SpecPolicy:
 
     def _ok_for_request(self, name: str, meta: dict, request: ServeRequest,
                         verify_meta: dict) -> bool:
+        if meta.get("breaker_open"):
+            # tripped draft head: serve plain rather than speculate on a
+            # head the breaker took out (same stamp head_eligible honors)
+            return False
         if request.sampled:
             if not meta.get("supports_sampling", True):
                 return False

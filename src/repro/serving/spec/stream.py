@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.request import ServeRequest
+from repro.serving.resilience.faults import guard_tokens
 from repro.serving.spec.acceptance import accept_draft, greedy_accept_lengths
 from repro.serving.spec.policy import DraftLenController
 
@@ -162,6 +163,11 @@ class SpecDecodeStream:
             self._nprng = np.random.default_rng(self.seed + 0x5bec)
         self.controller = controller
         self.kv_pool = kv_pool
+        # resilience hooks: the scheduler arms the injector; draft and
+        # verify boundaries guard under their OWN head names so a breaker
+        # can trip the draft alone (degrade to plain decode)
+        self.fault_injector = None
+        self.vocab = int(engine.W.shape[0])
         self._snapshot = _needs_snapshot(engine.model.cfg)
         self.cache = engine.model.init_cache(self.width, engine.max_len,
                                              dtype=engine.cache_dtype)
@@ -233,28 +239,36 @@ class SpecDecodeStream:
                 f"{self.n_max - 1}), stream max_len is {eng.max_len}")
         slot = self._first_free()
         pages = []
-        if self.kv_pool is not None:
-            P = self.kv_pool.page_size
-            n_pages = -(-need // P)
-            try:
-                for _ in range(n_pages):
+        # ANY failure between here and the guard — pool exhaustion OR a
+        # head fault mid-prefill — releases the reservation and leaves the
+        # stream untouched (splice/PRNG commit only after the guard passes)
+        try:
+            if self.kv_pool is not None:
+                P = self.kv_pool.page_size
+                for _ in range(-(-need // P)):
                     pages.append(self.kv_pool.alloc())
-            except Exception:
-                for pg in pages:
-                    self.kv_pool.release(pg)
-                raise
-        cache1 = eng.model.init_cache(1, eng.max_len, dtype=eng.cache_dtype)
-        h, cache1 = eng._jit_prefill(
-            eng.params, {"tokens": jnp.asarray(request.prompt[None])}, cache1)
-        h_last = h[:, -1]
-        vh = self.verify_head
-        h_in = h_last if vh.is_jittable else np.asarray(h_last)
+            cache1 = eng.model.init_cache(1, eng.max_len,
+                                          dtype=eng.cache_dtype)
+            h, cache1 = eng._jit_prefill(
+                eng.params, {"tokens": jnp.asarray(request.prompt[None])},
+                cache1)
+            h_last = h[:, -1]
+            vh = self.verify_head
+            h_in = h_last if vh.is_jittable else np.asarray(h_last)
+            if self.sampled:
+                key, k0 = jax.random.split(self._key)
+                first = vh.sample(k0, h_in, self.temperature, self.top_p)
+            else:
+                first = vh.next(h_in)
+            first = int(guard_tokens(self.fault_injector, "join",
+                                     self.verify_name, first,
+                                     self.vocab).ravel()[0])
+        except Exception:
+            for pg in pages:
+                self.kv_pool.release(pg)
+            raise
         if self.sampled:
-            self._key, k0 = jax.random.split(self._key)
-            first = vh.sample(k0, h_in, self.temperature, self.top_p)
-        else:
-            first = vh.next(h_in)
-        first = int(np.asarray(first)[0])
+            self._key = key
         if self._repl is not None:
             cache1 = jax.device_put(cache1, self._repl)
         from repro.serving.engine import _splice_cache
@@ -326,6 +340,20 @@ class SpecDecodeStream:
             exact_ids = np.asarray(fn(*hs))                  # (n_max, W)
             acc_len = greedy_accept_lengths(
                 drafts, exact_ids[:n].T)                     # (W,)
+
+        # guard BEFORE the apply loop: every commit (tok/pos/slots/cache)
+        # lives below, so a draft- or verify-boundary fault rolls the whole
+        # round back and a greedy retry replays it bit-identically. Draft
+        # and verify guard under their own head names — the scheduler can
+        # strip a faulting draft and keep decoding plain on the verify head
+        guard_tokens(self.fault_injector, "draft", self.draft_name,
+                     drafts[idx], self.vocab)
+        if self.sampled:
+            if self.fault_injector is not None:
+                self.fault_injector.raise_for("verify", self.verify_name)
+        else:
+            guard_tokens(self.fault_injector, "verify", self.verify_name,
+                         exact_ids[:n][:, idx], self.vocab)
 
         sel = np.full((self.width,), n - 1, np.int32)        # snapshot index
         round_accepted = round_emitted = 0

@@ -126,14 +126,18 @@ def test_page_pool_refcount_invariants(num_pages, page_size, data):
     model of held references: no double free, no refcount leak, and
     pages-in-use always equals the number of distinct live pages — the
     allocator half of the paged-KV bit-identity story (satellite: paged
-    KV pool)."""
+    KV pool). ``faulted_txn`` is the resilience layer's guard-then-commit
+    shape: a page CHAIN taken mid-join/step that a ``HeadFault`` rolls
+    back in full — the invariants must hold whether the transaction
+    commits or aborts."""
     from repro.serving.kvpool.pool import TRASH_PAGE, PagePool, PoolExhausted
 
     pool = PagePool(num_pages, page_size)
     held = []                               # model: one entry per live ref
     for _ in range(data.draw(st.integers(1, 60), label="n_ops")):
         op = data.draw(st.sampled_from(
-            ["alloc", "retain", "release", "cow", "ensure_writable"]),
+            ["alloc", "retain", "release", "cow", "ensure_writable",
+             "faulted_txn"]),
             label="op")
         if op == "alloc":
             try:
@@ -141,6 +145,21 @@ def test_page_pool_refcount_invariants(num_pages, page_size, data):
             except PoolExhausted as e:
                 assert not pool.pages_free
                 assert e.needed == 1 and e.total == num_pages - 1
+        elif op == "faulted_txn":
+            # the stream fault path: allocate a chain (join prefill / a
+            # step's new page), then either a guard failure rolls back
+            # EVERY page taken, or the guard passes and the chain commits
+            taken = []
+            try:
+                for _ in range(data.draw(st.integers(1, 3), label="chain")):
+                    taken.append(pool.alloc())
+            except PoolExhausted:
+                assert not pool.pages_free
+            if data.draw(st.booleans(), label="fault"):
+                for pg in reversed(taken):  # HeadFault: full rollback
+                    pool.release(pg)
+            else:
+                held.extend(taken)          # guard passed: commit
         elif not held:
             continue
         else:
