@@ -28,6 +28,10 @@ from repro.models import build_model
 from repro.optim import adamw_init
 
 CACHE = os.environ.get("BENCH_CACHE", "results/bench_cache")
+# BENCH_serving.json section schema: v1 is the historical implicit
+# (unversioned) shape; v2 stamps every section with schema_version +
+# generated_at. Bump when a section's field contract changes.
+SCHEMA_VERSION = 2
 VOCAB = 8000
 D_MODEL = 128
 TRAIN_STEPS = 2400
@@ -113,7 +117,15 @@ def update_bench_json(section: str, payload: dict,
     into place with ``os.replace`` (atomic on POSIX), so a benchmark
     killed mid-write can never leave a truncated ``BENCH_serving.json``
     that silently eats every other benchmark's sections on the next
-    merge. A corrupt existing file is loudly rebuilt, not silently."""
+    merge. A corrupt existing file is loudly rebuilt, not silently.
+
+    Every section is stamped with ``schema_version`` (``SCHEMA_VERSION``)
+    and ``generated_at`` (UTC ISO-8601). Pre-existing sections written
+    under an older schema are upgraded LOUDLY on merge — stamped with the
+    current version plus a ``schema_upgraded_from`` marker — so a mixed
+    file always says which sections still carry old-shape fields instead
+    of silently mixing schemas."""
+    import datetime
     data = {}
     if os.path.exists(path):
         try:
@@ -123,6 +135,17 @@ def update_bench_json(section: str, payload: dict,
             print(f"[bench] WARNING: existing {path} is unreadable "
                   f"({e}); rebuilding it from this run's section only")
             data = {}
+    for name, sec in data.items():
+        if not isinstance(sec, dict) or name == section:
+            continue
+        old = sec.get("schema_version", 1)
+        if old < SCHEMA_VERSION:
+            print(f"[bench] WARNING: section {name!r} in {path} uses "
+                  f"schema v{old}; upgrading to v{SCHEMA_VERSION} "
+                  f"(its fields keep the old shape — re-run that "
+                  f"benchmark to refresh them)")
+            sec["schema_version"] = SCHEMA_VERSION
+            sec["schema_upgraded_from"] = old
 
     def _clean(o):
         if isinstance(o, dict):
@@ -136,7 +159,11 @@ def update_bench_json(section: str, payload: dict,
             return _clean(o.item())
         return o
 
-    data[section] = _clean(payload)
+    stamped = dict(payload)
+    stamped["schema_version"] = SCHEMA_VERSION
+    stamped["generated_at"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    data[section] = _clean(stamped)
     tmp = f"{path}.tmp.{os.getpid()}"
     try:
         with open(tmp, "w") as f:

@@ -42,8 +42,24 @@ except ImportError:                        # script's own dir is sys.path[0]
 from repro.serving import (BudgetAdmission, CircuitBreaker,
                            ContinuousScheduler, FaultInjector, LogicalClock,
                            PagePool, ServeRequest, ServeResult,
-                           StreamWatchdog, TierPolicy)
+                           StreamWatchdog, TierPolicy, Tracer,
+                           audit_cost_drift)
 from repro.serving.scheduler import TIER_DEADLINES, AdmissionRejected
+
+
+def _export_trace(tracer, path, label):
+    """Write the Chrome trace-event file + a one-line summary; returns the
+    JSON-ready trace telemetry for the bench section."""
+    if tracer is None:
+        return None
+    tracer.export_chrome(path)
+    evs = tracer.events()
+    n_req = sum(1 for e in evs if e["ph"] == "X" and e["name"] == "request")
+    print(f"[{label}] trace: {len(evs)} events ({n_req} request spans, "
+          f"{tracer.dropped} dropped) -> {path} "
+          f"(load in chrome://tracing or ui.perfetto.dev)")
+    return {"path": path, "events": len(evs), "request_spans": n_req,
+            "dropped": tracer.dropped}
 
 
 def main(argv=None):
@@ -92,6 +108,11 @@ def main(argv=None):
                          "TPU the sub-second tiers assume; set 1.0 to "
                          "measure preemption churn)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the measured run's span timeline as a "
+                         "Chrome trace-event JSON file (chrome://tracing / "
+                         "Perfetto); works with the standard, --chaos and "
+                         "--shared-prefix workloads")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output file ('' disables)")
     args = ap.parse_args(argv)
@@ -143,13 +164,18 @@ def main(argv=None):
     counts0 = engine.compiled_step_counts()
 
     deadlines = {t: s * args.deadline_scale for t, s in TIER_DEADLINES.items()}
+    # tracer on the SAME clock the scheduler reads, so request spans and
+    # deadline bookkeeping share one timeline
+    tracer = Tracer(clock=time.monotonic) if args.trace else None
     sched = ContinuousScheduler(
         engine, policy=policy,
         admission=BudgetAdmission(flops_budget=budget),
-        max_slots=args.max_slots, max_streams=8, deadlines=deadlines)
+        max_slots=args.max_slots, max_streams=8, deadlines=deadlines,
+        tracer=tracer)
     wall = _drive(sched, requests, rate, args.seed)
     counts1 = engine.compiled_step_counts()
     recompiles = sum(counts1.values()) - sum(counts0.values())
+    trace_info = _export_trace(tracer, args.trace, "serve_continuous")
 
     stats = sched.stats
     snap = stats.snapshot()
@@ -171,6 +197,21 @@ def main(argv=None):
     for head, d in snap["per_head"].items():
         print(f"{head:<18}{d['requests']:>9}{d['tokens']:>8}"
               f"{d['tokens_per_s']:>10.0f}")
+    # cost-model drift audit: cataloged flops/bytes per query vs the HLO-
+    # measured executables and wall-clock timing, per active head — the
+    # numbers CostAwarePolicy / BudgetAdmission priced this run with
+    drift = audit_cost_drift(engine, tuple(policy.candidates))
+    print(f"{'head':<18}{'pred flops':>12}{'hlo flops':>12}{'ratio':>7}")
+    for head, d in drift.items():
+        if "error" in d:
+            print(f"{head:<18}  audit error: {d['error']}")
+            continue
+        pf = d["predicted"]["flops_per_query"]
+        mf = d["measured"].get("hlo_flops")
+        rf = d["ratio"]["flops"]
+        print(f"{head:<18}{pf:>12.3g}"
+              f"{mf if mf is not None else float('nan'):>12.3g}"
+              f"{rf if rf is not None else float('nan'):>7.2f}")
     if args.json:
         path = update_bench_json("serve_continuous", {
             "devices": jax.device_count(), "vocab": cfg.vocab_size,
@@ -178,7 +219,11 @@ def main(argv=None):
             "reduced": args.reduced, "flops_budget": budget,
             "wall_s": wall, "completed_tokens": completed_tokens,
             "tokens_per_s": completed_tokens / wall,
-            "recompiles": recompiles, **snap,
+            "recompiles": recompiles, "trace": trace_info, **snap,
+        }, path=args.json)
+        update_bench_json("cost_drift", {
+            "devices": jax.device_count(), "vocab": cfg.vocab_size,
+            "reduced": args.reduced, "per_head": drift,
         }, path=args.json)
         print(f"[serve_continuous] wrote {path}")
     return 0
@@ -254,10 +299,14 @@ def _chaos(args, cfg, corpus, engine, n_req):
     watchdog = StreamWatchdog(stall_timeout_s=5e-3)
     deadlines = {t: s * args.deadline_scale
                  for t, s in TIER_DEADLINES.items()}
+    # PEEK the logical clock (clock.t, not clock()): reads auto-advance
+    # the shared simulated timeline, so a tracing read would perturb the
+    # deterministic fault/deadline schedule the run replays
+    tracer = Tracer(clock=lambda: clock.t) if args.trace else None
     sched = ContinuousScheduler(
         engine, policy=policy, max_slots=args.max_slots, max_streams=8,
         deadlines=deadlines, clock=clock, fault_injector=injector,
-        breaker=breaker, watchdog=watchdog, max_retries=2)
+        breaker=breaker, watchdog=watchdog, max_retries=2, tracer=tracer)
     t0 = time.perf_counter()
     unhandled = None
     try:
@@ -270,6 +319,7 @@ def _chaos(args, cfg, corpus, engine, n_req):
     wall = time.perf_counter() - t0
     counts1 = engine.compiled_step_counts()
     recompiles = sum(counts1.values()) - sum(counts0.values())
+    trace_info = _export_trace(tracer, args.trace, "serve_chaos")
 
     completed = [(i, r) for i, r in enumerate(results)
                  if isinstance(r, ServeResult)]
@@ -316,7 +366,7 @@ def _chaos(args, cfg, corpus, engine, n_req):
             "fault_rids": len(sched.fault_rids),
             "faults_fired": injector.telemetry(),
             "greedy_parity": parity, "parity_checked": len(clean[:8]),
-            "recompiles": recompiles, "ok": ok, **snap,
+            "recompiles": recompiles, "ok": ok, "trace": trace_info, **snap,
         }, path=args.json)
         print(f"[serve_chaos] wrote {path}")
     return 0 if ok else 1
@@ -366,12 +416,15 @@ def _shared_prefix(args, cfg, corpus, engine, n_req, rate):
 
     deadlines = {t: s * args.deadline_scale
                  for t, s in TIER_DEADLINES.items()}
+    tracer = Tracer(clock=time.monotonic) if args.trace else None
     sched = ContinuousScheduler(engine, policy=policy,
                                 max_slots=args.max_slots, max_streams=8,
-                                deadlines=deadlines, kv_pool=pool)
+                                deadlines=deadlines, kv_pool=pool,
+                                tracer=tracer)
     wall = _drive(sched, requests, rate, args.seed)
     counts1 = engine.compiled_step_counts()
     recompiles = sum(counts1.values()) - sum(counts0.values())
+    trace_info = _export_trace(tracer, args.trace, "serve_shared_prefix")
     hit_rate = (radix.tokens_hit - hit0) / max(1, radix.tokens_total - tot0)
 
     results = sched.results()
@@ -408,7 +461,8 @@ def _shared_prefix(args, cfg, corpus, engine, n_req, rate):
             "wall_s": wall, "completed_tokens": tokens,
             "tokens_per_s": tokens / wall,
             "prefix_hit_rate": hit_rate,
-            "greedy_parity": parity, "recompiles": recompiles, **snap,
+            "greedy_parity": parity, "recompiles": recompiles,
+            "trace": trace_info, **snap,
         }, path=args.json)
         print(f"[serve_shared_prefix] wrote {path}")
     return 0

@@ -57,6 +57,11 @@ def main(argv=None):
                          "so output is unchanged. Needs --scheduler (spec "
                          "runs on SpecDecodeStream lanes) and a head "
                          "distinct from the verify head")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="--scheduler only: write one structured JSON "
+                         "record per scheduler tick (numeric stats deltas "
+                         "+ breaker states) to PATH; the human-readable "
+                         "summary lines are unchanged")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -125,6 +130,10 @@ def main(argv=None):
                 return 2
             except Exception:
                 pass
+    if args.log_jsonl is not None and not args.scheduler:
+        print("[serve] --log-jsonl needs --scheduler: the per-tick records "
+              "come from the ContinuousScheduler's tick loop")
+        return 2
 
     corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=min(64, cfg.vocab_size // 4),
                               seed=args.seed)
@@ -165,7 +174,8 @@ def main(argv=None):
 
     if args.scheduler:
         return _serve_scheduler(engine, requests, head_name,
-                                draft=args.draft_head)
+                                draft=args.draft_head,
+                                log_jsonl=args.log_jsonl)
 
     t0 = time.time()
     exact = engine.serve_batch(requests, policy=StaticPolicy("exact"))
@@ -189,7 +199,26 @@ def main(argv=None):
     return 0
 
 
-def _serve_scheduler(engine, requests, head_name, draft=None):
+def _tick_delta(prev: dict, cur: dict) -> dict:
+    """Numeric top-level deltas between two ``ServerStats.snapshot()``s —
+    the per-tick payload of ``--log-jsonl`` (counters that didn't move are
+    omitted, so quiet ticks stay one short line)."""
+    out = {}
+    import math
+    for k, v in cur.items():
+        p = prev.get(k, 0)
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        if not isinstance(p, (int, float)) or not math.isfinite(v) \
+                or not math.isfinite(p):
+            continue
+        if v != p:
+            out[k] = v - p
+    return out
+
+
+def _serve_scheduler(engine, requests, head_name, draft=None,
+                     log_jsonl=None):
     """--scheduler mode: continuous batching with admission control.
 
     Traffic is the launcher's request set re-tiered round-robin
@@ -236,7 +265,29 @@ def _serve_scheduler(engine, requests, head_name, draft=None):
                                 admission=BudgetAdmission(flops_budget=budget),
                                 max_slots=4, kv_pool=kv_pool, spec=spec)
     t0 = time.time()
-    results = sched.serve(traffic)
+    if log_jsonl is None:
+        results = sched.serve(traffic)
+    else:
+        # submit-all + explicit tick loop so every tick emits one
+        # structured record (stats delta + breaker states); identical
+        # serving behavior to sched.serve(traffic)
+        import json
+        for r in traffic:
+            sched.submit(r)
+        prev = sched.stats.snapshot()
+        with open(log_jsonl, "w") as f:
+            while sched.busy:
+                sched.step()
+                snap = sched.stats.snapshot()
+                rz = snap.get("resilience") or {}
+                rec = {"tick": snap["ticks"],
+                       "delta": _tick_delta(prev, snap),
+                       "queue_depth": snap["queue_depth"],
+                       "breaker_states": rz.get("breaker_states", {})}
+                f.write(json.dumps(rec) + "\n")
+                prev = snap
+        results = sched.results()
+        print(f"[serve] per-tick JSONL log: {log_jsonl}")
     wall = time.time() - t0
     snap = sched.stats.snapshot()
     tokens = sum(len(r.tokens) for r in results if isinstance(r, ServeResult))

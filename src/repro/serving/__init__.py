@@ -1,6 +1,9 @@
 from repro.serving.engine import DecodeEngine, DecodeStream, GenerationResult
 from repro.serving.kvpool import (PagedDecodeStream, PagePool, PoolExhausted,
                                   RadixCache)
+from repro.serving.observe import (NULL_TRACER, Counter, Gauge, Histogram,
+                                   MetricsRegistry, NullTracer, Tracer,
+                                   audit_cost_drift)
 from repro.serving.request import ServeRequest, ServeResult
 from repro.serving.resilience import (CircuitBreaker, FaultInjector,
                                       FaultSpec, HeadFault, LogicalClock,
@@ -24,4 +27,7 @@ __all__ = ["DecodeEngine", "DecodeStream", "GenerationResult",
            "SpecPolicy", "SpecDecodeStream", "DraftLenController",
            "spec_step_flops",
            "FaultInjector", "FaultSpec", "HeadFault", "LogicalClock",
-           "CircuitBreaker", "StreamWatchdog"]
+           "CircuitBreaker", "StreamWatchdog",
+           "Tracer", "NullTracer", "NULL_TRACER",
+           "Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "audit_cost_drift"]

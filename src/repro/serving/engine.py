@@ -53,6 +53,7 @@ from repro import heads as heads_registry
 from repro.core.screening import ScreenParams
 from repro.heads.base import MissingScreenError, SoftmaxHead
 from repro.models.model import Model
+from repro.serving.observe.trace import NULL_TRACER
 from repro.serving.request import ServeRequest, ServeResult
 from repro.serving.resilience.faults import guard_tokens
 
@@ -621,6 +622,10 @@ class DecodeStream:
         # emitting sentinel/NaN ids raises a typed HeadFault instead of
         # feeding garbage back into the decode)
         self.fault_injector = None
+        # observability: the scheduler arms its tracer here too; kernel
+        # spans time the host-side dispatch+guard window around the cached
+        # jitted step (the guard forces the device sync)
+        self.tracer = NULL_TRACER
         self.vocab = int(engine.W.shape[0])
         self.width = int(width)
         self.temperature = temperature
@@ -736,6 +741,8 @@ class DecodeStream:
         # scheduler's retry re-runs the identical step bit-for-bit (jax
         # caches are immutable pytrees — holding the old reference IS the
         # rollback, recurrent LSTM state included)
+        tr = self.tracer
+        k_t0 = tr.now() if tr.enabled else 0.0
         if self.sampled:
             fn = eng._sample_step(self.head, self.temperature, self.top_p)
             key, ki = jax.random.split(self._key)
@@ -745,6 +752,9 @@ class DecodeStream:
             nxt, _, cache = fn(eng.params, tok, self.cache, pos)
         nxt = guard_tokens(self.fault_injector, "step", self.head_name,
                            nxt, self.vocab, rows=idx)
+        if tr.enabled:
+            tr.span("kernel.step", "kernel", k_t0,
+                    args={"head": self.head_name, "active": len(idx)})
         if self.sampled:
             self._key = key
         self.cache = cache

@@ -46,6 +46,7 @@ import numpy as np
 from repro.serving.engine import _splice_cache, _StreamSlot
 from repro.serving.kvpool.pool import PagePool, PoolExhausted
 from repro.serving.request import ServeRequest
+from repro.serving.observe.trace import NULL_TRACER
 from repro.serving.resilience.faults import HeadFault, guard_tokens
 
 
@@ -73,6 +74,7 @@ class PagedDecodeStream:
         # resilience hooks: the scheduler arms the injector; the vocab
         # bound makes the output guards honest-failure detectors too
         self.fault_injector = None
+        self.tracer = NULL_TRACER
         self.vocab = int(engine.W.shape[0])
         self.family = engine.model.cfg.family
         self.max_pages = engine.max_len // pool.page_size
@@ -304,6 +306,8 @@ class PagedDecodeStream:
         # re-runs the identical step (pages grown by _ensure_pages stay in
         # their chains and are simply reused, same as the PoolExhausted
         # retry contract)
+        tr = self.tracer
+        k_t0 = tr.now() if tr.enabled else 0.0
         key = cache = new_k = new_v = store = None
         if self.family == "lstm":
             # the SAME cached dense step DecodeStream uses — the paged LSTM
@@ -330,6 +334,10 @@ class PagedDecodeStream:
                                           store.v, table, pos)
         nxt = guard_tokens(self.fault_injector, "step", self.head_name,
                            nxt, self.vocab, rows=idx)
+        if tr.enabled:
+            tr.span("kernel.step", "kernel", k_t0,
+                    args={"head": self.head_name, "active": len(idx),
+                          "paged": True})
         if self.sampled:
             self._key = key
         if self.family == "lstm":

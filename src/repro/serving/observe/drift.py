@@ -1,0 +1,105 @@
+"""Cost-model drift audit: cataloged head costs vs measured reality.
+
+Routing (``CostAwarePolicy``), admission (``BudgetAdmission``) and the
+spec-decode verify accounting all price work with the heads' analytic
+``flops_per_query`` / ``bytes_per_query``. Those models are written once
+and then drift — a kernel change, a new screen fit, a dtype switch — and
+a mispriced head silently misroutes traffic. This audit makes the drift
+visible: per head it reports
+
+* ``predicted``      — the cataloged ``describe()`` numbers,
+* ``measured``       — HLO cost analysis of the head's compiled
+  ``next`` executable (``launch/hlo_cost.analyze_hlo``, trip-count-
+  aware, plus XLA's own bytes-accessed) and wall-clock per-query
+  timing,
+* ``ratio``          — measured / predicted (NaN-safe: ``None`` in JSON
+  when either side is unmodeled).
+
+HLO analysis runs only for jittable, unsharded heads (mesh-aware
+executables embed collectives whose per-device accounting isn't
+comparable to the per-query model; numpy heads have no HLO at all) —
+wall-clock timing covers every head. Batch size 1 keeps the bytes
+numbers faithful to the per-query cost model's convention.
+
+The audit never throws per head: a head that fails to build or compile
+records an ``error`` entry so one broken backend can't hide the report
+for the others.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ratio(measured: float, predicted: float) -> Optional[float]:
+    if (predicted is None or measured is None
+            or not math.isfinite(predicted) or not math.isfinite(measured)
+            or predicted <= 0):
+        return None
+    return measured / predicted
+
+
+def _wall_per_query(head, h, iters: int, warmup: int) -> float:
+    """Wall seconds per single-query ``next`` call. np.asarray blocks on
+    device arrays so jax heads don't time async dispatch."""
+    x = h if head.is_jittable else np.asarray(h)
+    for _ in range(warmup):
+        np.asarray(head.next(x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        np.asarray(head.next(x))
+    return (time.perf_counter() - t0) / max(1, iters)
+
+
+def audit_cost_drift(engine, names: Sequence[str], *,
+                     iters: int = 50, warmup: int = 3) -> Dict[str, dict]:
+    """Per-head drift report for every name resolvable in ``engine``.
+
+    Returns ``{head_name: {"predicted": {...}, "measured": {...},
+    "ratio": {...}}}`` — the ``cost_drift`` section of
+    ``BENCH_serving.json``. Unresolvable names are skipped (mirroring
+    ``head_catalog``); per-head failures downgrade to an ``error``
+    entry."""
+    from repro.launch.hlo_cost import analyze_hlo, xla_bytes_accessed
+
+    d = engine.model.cfg.d_model
+    h = jnp.zeros((1, d), jnp.float32)
+    out: Dict[str, dict] = {}
+    for name in dict.fromkeys(names):
+        try:
+            head = engine.resolve_head(name)
+        except Exception:
+            continue                       # not buildable in this engine
+        try:
+            desc = head.describe()
+            entry: Dict[str, object] = {
+                "predicted": {
+                    "flops_per_query": desc["flops_per_query"],
+                    "bytes_per_query": desc["bytes_per_query"],
+                },
+            }
+            measured: Dict[str, object] = {}
+            if head.is_jittable and head.mesh is None:
+                compiled = jax.jit(head.next).lower(h).compile()
+                cost = analyze_hlo(compiled.as_text())
+                measured["hlo_flops"] = cost.flops
+                measured["hlo_bytes"] = cost.bytes_accessed
+                measured["xla_bytes"] = xla_bytes_accessed(compiled)
+            measured["wall_s_per_query"] = _wall_per_query(
+                head, h, iters, warmup)
+            entry["measured"] = measured
+            entry["ratio"] = {
+                "flops": _ratio(measured.get("hlo_flops"),
+                                desc["flops_per_query"]),
+                "bytes": _ratio(measured.get("hlo_bytes"),
+                                desc["bytes_per_query"]),
+            }
+            out[name] = entry
+        except Exception as e:             # pragma: no cover - per-head guard
+            out[name] = {"error": f"{type(e).__name__}: {e}"}
+    return out

@@ -32,6 +32,12 @@ class StreamWatchdog:
     def armed(self) -> bool:
         return self.stall_timeout_s is not None
 
+    @property
+    def tracked(self) -> int:
+        """Requests currently under progress tracking — the watchdog's
+        gauge for the metrics registry."""
+        return len(self._progress)
+
     def observe(self, rid: int, n_tokens: int, now: float) -> None:
         prev = self._progress.get(rid)
         if prev is None or n_tokens != prev[0]:

@@ -46,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.serving.engine import DecodeEngine, DecodeStream
 from repro.serving.kvpool.pool import PoolExhausted
+from repro.serving.observe.trace import NULL_TRACER
 from repro.serving.request import ServeRequest, ServeResult
 from repro.serving.resilience.breaker import OPEN
 from repro.serving.resilience.faults import HeadFault
@@ -119,6 +120,13 @@ class ContinuousScheduler:
                     re-routed like faulted ones.
     ``max_retries`` transient-fault retries per request before fallback
                     re-routing (exponential tick-backoff, capped at 8).
+    ``tracer``      optional ``observe.Tracer``: per-request span timeline
+                    (submit → admit/queue/join → decode → retire, plus
+                    every fault/retry/fallback instant), scheduler-tick
+                    spans and the streams' kernel-dispatch spans. Give it
+                    the SAME clock as the scheduler so the timeline and
+                    the deadline machinery share an axis. ``None`` keeps
+                    the hot path on the allocation-free ``NULL_TRACER``.
     """
 
     def __init__(self, engine: DecodeEngine, policy=None,
@@ -127,7 +135,8 @@ class ContinuousScheduler:
                  deadlines: Optional[Dict[str, float]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  kv_pool=None, spec=None, fault_injector=None,
-                 breaker=None, watchdog=None, max_retries: int = 2):
+                 breaker=None, watchdog=None, max_retries: int = 2,
+                 tracer=None):
         if max_slots < 1 or max_streams < 1:
             raise ValueError("max_slots and max_streams must be >= 1")
         if max_retries < 0:
@@ -157,6 +166,8 @@ class ContinuousScheduler:
         self.fault_rids: set = set()    # rids any fault/retry/fallback touched
         self._retry_at: Dict[tuple, int] = {}   # stream sig -> resume tick
         self._fail_count: Dict[tuple, int] = {}  # sig -> consecutive faults
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trace_t0: Dict[int, float] = {}   # rid -> submit stamp
         if breaker is not None:
             # chain the breaker's transition hook through ServerStats so
             # trips/half-opens/closes are observable in every snapshot
@@ -167,6 +178,50 @@ class ContinuousScheduler:
                 if _user is not None:
                     _user(head, old, new)
             breaker.on_transition = _on_transition
+        # live-source collectors: watchdog tracking + per-lane adaptive
+        # draft length refresh into the stats' typed-metrics registry at
+        # every exposition (ServerStats' own counters are mirrored by its
+        # own collector; these two sources live outside it)
+        self.stats.metrics.register_collector(self._collect_live_metrics)
+
+    def _collect_live_metrics(self) -> None:
+        m = self.stats.metrics
+        if self.watchdog is not None:
+            m.gauge("serve_watchdog_tracked",
+                    "requests under stall tracking").set(
+                self.watchdog.tracked)
+        for stream in self._streams.values():
+            ctl = getattr(stream, "controller", None)
+            if ctl is None:
+                continue
+            lane = f"{stream.draft_name}->{stream.verify_name}"
+            m.gauge("serve_spec_draft_len",
+                    "adaptive draft length per spec lane",
+                    ("lane",)).set(ctl.n, lane=lane)
+            m.gauge("serve_spec_draft_acceptance",
+                    "EMA draft acceptance per spec lane",
+                    ("lane",)).set(ctl.acceptance, lane=lane)
+
+    # -- tracing -------------------------------------------------------------
+    def _trace_terminal(self, rid: int, outcome: str,
+                        head: Optional[str] = None,
+                        n_tokens: Optional[int] = None) -> None:
+        """Close request ``rid``'s top-level span: one "request" span from
+        its submit stamp to now, on its own trace lane (``tid = rid``),
+        emitted at EVERY terminal site — completed, rejected, preempted,
+        faulted or timed out — so the submit→retire coverage the traced CI
+        smoke asserts holds for every funnel exit."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        t0 = self._trace_t0.pop(rid, None)
+        args = {"outcome": outcome}
+        if head is not None:
+            args["head"] = head
+        if n_tokens is not None:
+            args["tokens"] = n_tokens
+        tr.span("request", "request", tr.now() if t0 is None else t0,
+                tid=rid, args=args)
 
     # -- catalog / routing ---------------------------------------------------
     def _default_name(self) -> str:
@@ -251,6 +306,12 @@ class ContinuousScheduler:
         self._next_rid += 1
         self._order.append(rid)
         self.stats.submitted += 1
+        tr = self.tracer
+        if tr.enabled:
+            self._trace_t0[rid] = tr.now()
+            tr.instant("submit", "request", tid=rid,
+                       args={"tier": request.latency_tier,
+                             "max_new": int(request.max_new)})
         routed = self._route(request)
         name = routed if routed is not None else self._default_name()
         # admission's downgrade universe must not depend on submission
@@ -300,12 +361,23 @@ class ContinuousScheduler:
             self._results[rid] = AdmissionRejected(
                 request=request, reason=decision.reason, stage="admission")
             self.stats.rejected += 1
+            if tr.enabled:
+                tr.instant("reject", "admission", tid=rid,
+                           args={"reason": decision.reason})
+                self._trace_terminal(rid, "rejected", head=name)
             return rid
         if decision.action == "downgrade":
             self.stats.downgraded += 1
             head = decision.head
+            if tr.enabled:
+                tr.instant("downgrade", "admission", tid=rid,
+                           args={"from": name, "to": head})
         else:
             head = routed        # None keeps the engine default instance
+        if tr.enabled:
+            tr.instant("admit", "admission", tid=rid,
+                       args={"head": decision.head or name,
+                             **({"draft": draft} if draft else {})})
         cost = head_flops(catalog, decision.head or name)
         if draft is not None:
             cost += head_flops(catalog, draft)
@@ -361,6 +433,7 @@ class ContinuousScheduler:
                 head=qr.head, width=self.max_slots,
                 temperature=req.temperature, top_p=req.top_p, seed=req.seed)
         stream.fault_injector = self.fault_injector
+        stream.tracer = self.tracer
         self._streams[sig] = stream
         return stream
 
@@ -414,16 +487,23 @@ class ContinuousScheduler:
         self._inflight.pop(qr.id, None)
         if self.watchdog is not None:
             self.watchdog.forget(qr.id)
+        tr = self.tracer
         if qr.draft is not None and failed_head == qr.draft:
             qr.draft, qr.draft_len = None, 0
             qr.retries = 0
             self.stats.record_spec_degraded()
+            if tr.enabled:
+                tr.instant("spec_degrade", "resilience", tid=qr.id,
+                           args={"draft": failed_head})
             self.queue.requeue(qr)
             return 0
         qr.tried_heads.add(failed_head)
         fallback = self._fallback_head(qr)
         if fallback is not None:
             self.stats.record_fallback(failed_head, fallback)
+            if tr.enabled:
+                tr.instant("fallback", "resilience", tid=qr.id,
+                           args={"from": failed_head, "to": fallback})
             qr.head = fallback
             qr.cost = head_flops(self._catalog, fallback)
             qr.draft, qr.draft_len = None, 0
@@ -437,6 +517,7 @@ class ContinuousScheduler:
                    f"clears accuracy_floor={qr.request.accuracy_floor} "
                    f"(tried {sorted(qr.tried_heads)})")
         self.stats.record_faulted()
+        self._trace_terminal(qr.id, "faulted", head=failed_head)
         return 1
 
     def _offload_stream(self, sig: tuple, stream, failed_head: str) -> int:
@@ -458,8 +539,13 @@ class ContinuousScheduler:
         step); permanent or retry-exhausted faults offload the stream and
         re-route its requests. Either way the breaker hears about it."""
         self.stats.record_fault(e.kind, e.transient)
+        tr = self.tracer
         for _, tag in stream.occupied():
             self.fault_rids.add(tag.id)
+            if tr.enabled:
+                tr.instant("fault", "resilience", tid=tag.id,
+                           args={"head": e.head, "kind": e.kind,
+                                 "transient": e.transient})
         if self.breaker is not None:
             self.breaker.record_failure(e.head, kind=e.kind,
                                         hard=not e.transient)
@@ -472,6 +558,10 @@ class ContinuousScheduler:
                 self.stats.record_retry()
                 self._retry_at[sig] = self.stats.ticks + min(
                     2 ** (fails - 1), 8)
+                if tr.enabled:
+                    for _, tag in stream.occupied():
+                        tr.instant("retry", "resilience", tid=tag.id,
+                                   args={"head": e.head, "attempt": fails})
                 return 0
         terminal = self._offload_stream(sig, stream, e.head)
         if tripped:
@@ -494,6 +584,8 @@ class ContinuousScheduler:
         self.stats.ticks += 1
         terminal = 0
         pool_blocked = False    # a PoolExhausted fired somewhere this tick
+        tr = self.tracer
+        tick_t0 = tr.now() if tr.enabled else 0.0
         # 0. injected tick delays (chaos): advances the shared logical
         #    clock, so deadline/timeout machinery feels the lost time
         if self.fault_injector is not None:
@@ -512,6 +604,9 @@ class ContinuousScheduler:
                 # DRAFT head: strip the draft, decode plain
                 if qr.draft is not None and \
                         not self.breaker.allow(qr.draft):
+                    if tr.enabled:
+                        tr.instant("spec_degrade", "resilience", tid=qr.id,
+                                   args={"draft": qr.draft})
                     qr.draft, qr.draft_len = None, 0
                     self.stats.record_spec_degraded()
                     self.fault_rids.add(qr.id)
@@ -519,6 +614,10 @@ class ContinuousScheduler:
                     fallback = self._fallback_head(qr)
                     if fallback is not None and fallback != qr.head:
                         self.stats.record_fallback(qr.head, fallback)
+                        if tr.enabled:
+                            tr.instant("fallback", "resilience", tid=qr.id,
+                                       args={"from": qr.head,
+                                             "to": fallback})
                         self.fault_rids.add(qr.id)
                         qr.head = fallback
                         qr.cost = head_flops(self._catalog, fallback)
@@ -541,6 +640,10 @@ class ContinuousScheduler:
                 # anything else re-routes or terminates typed
                 self.stats.record_fault(e.kind, e.transient)
                 self.fault_rids.add(qr.id)
+                if tr.enabled:
+                    tr.instant("fault", "resilience", tid=qr.id,
+                               args={"head": e.head, "kind": e.kind,
+                                     "transient": e.transient})
                 if self.breaker is not None:
                     self.breaker.record_failure(e.head, kind=e.kind,
                                                 hard=not e.transient)
@@ -552,6 +655,10 @@ class ContinuousScheduler:
                     self.stats.record_retry()
                     self._retry_at[sig] = self.stats.ticks + min(
                         2 ** (qr.retries - 1), 8)
+                    if tr.enabled:
+                        tr.instant("retry", "resilience", tid=qr.id,
+                                   args={"head": e.head,
+                                         "attempt": qr.retries})
                 else:
                     self.queue.remove(qr)
                     terminal += self._redispatch(qr, e.head)
@@ -571,6 +678,8 @@ class ContinuousScheduler:
                         head=stream.head_name, reason=str(e))
                     self.stats.preempted += 1
                     terminal += 1
+                    self._trace_terminal(qr.id, "preempted",
+                                         head=stream.head_name)
                 continue
             dt = time.perf_counter() - t0
             self.queue.remove(qr)
@@ -578,8 +687,13 @@ class ContinuousScheduler:
             now = self.clock()
             qr.placed_at = now
             self._inflight[qr.id] = qr
-            self.stats.queue_wait.record(now - qr.arrival)
+            self.stats.record_queue_wait(now - qr.arrival)
             self.stats.record_decode(stream.head_name, 1, dt)  # first token
+            if tr.enabled:
+                tr.span("queue.wait", "queue", qr.arrival, now, tid=qr.id)
+                tr.instant("join", "queue", tid=qr.id,
+                           args={"head": stream.head_name,
+                                 "join_s": dt})
         # 2. advance streams, retire finished sequences. A spec stream's
         #    tick is a whole draft/verify ROUND: it emits a VARIABLE number
         #    of tokens (1..draft_len per slot), so its token credit is the
@@ -642,6 +756,9 @@ class ContinuousScheduler:
                     stream.head_name, now - qr.arrival,
                     on_time=now <= qr.deadline)
                 terminal += 1
+                self._trace_terminal(qr.id, "completed",
+                                     head=stream.head_name,
+                                     n_tokens=len(tokens))
         # 3. preempt for starving waiters. A victim must be STRICTLY lower
         #    tier than the waiter and expendable — past its deadline, or
         #    best-effort work that never had one (the "batch" tier's inf
@@ -688,6 +805,8 @@ class ContinuousScheduler:
             self._inflight.pop(tag.id, None)
             self.stats.preempted += 1
             terminal += 1
+            self._trace_terminal(tag.id, "preempted",
+                                 head=victim_stream.head_name)
             if own is None:
                 lane_freed_for.add(sig)
         # 3b. POOL pressure: a PoolExhausted this tick means page capacity —
@@ -727,6 +846,8 @@ class ContinuousScheduler:
                 self._inflight.pop(tag.id, None)
                 self.stats.preempted += 1
                 terminal += 1
+                self._trace_terminal(tag.id, "preempted",
+                                     head=victim_stream.head_name)
                 self._pool_stalled_ticks = 0
         else:
             self._pool_stalled_ticks = 0
@@ -748,6 +869,9 @@ class ContinuousScheduler:
                 _, _, partial = stream.evict(slot)
                 self.stats.record_stall()
                 head = stream.head_name
+                if tr.enabled:
+                    tr.instant("stall", "resilience", tid=rid,
+                               args={"head": head})
                 if self.breaker is not None:
                     self.breaker.record_failure(head, kind="stall")
                 terminal += self._redispatch(qr, head, partial=partial)
@@ -772,6 +896,7 @@ class ContinuousScheduler:
                        f"({now - qr.arrival:.3f}s since submission)")
             self.stats.record_timeout()
             terminal += 1
+            self._trace_terminal(qr.id, "timed_out", head=head)
         for qr in list(self.queue):
             if qr.request.timeout_s is not None \
                     and now - qr.arrival > qr.request.timeout_s:
@@ -782,10 +907,16 @@ class ContinuousScheduler:
                            f"while queued")
                 self.stats.record_timeout()
                 terminal += 1
+                self._trace_terminal(qr.id, "timed_out", head=qr.head)
         if self.kv_pool is not None:
             self.stats.observe_pool(self.kv_pool.telemetry(),
                                     stalled=pool_blocked)
         self.stats.observe_queue(len(self.queue))
+        if tr.enabled:
+            tr.span("tick", "scheduler", tick_t0,
+                    args={"tick": self.stats.ticks, "terminal": terminal,
+                          "queued": len(self.queue),
+                          "inflight": len(self._inflight)})
         return terminal
 
     def _find_slot(self, rid: int):

@@ -13,9 +13,11 @@ fiction.
 """
 from __future__ import annotations
 
+import copy
 import math
 from typing import Dict, Optional
 
+from repro.serving.observe.metrics import MetricsRegistry
 from repro.utils.timing import LatencyTracker
 
 
@@ -84,6 +86,19 @@ class ServerStats:
         # bounded transition log: (tick, head, old, new), newest last
         self.breaker_transitions = []
         self._resilience_touched = False
+        # typed-metrics mirror: the plain attributes above stay the source
+        # of truth (and the snapshot() contract); a registered collector
+        # refreshes the registry from them at every exposition, while the
+        # two latency histograms are push-fed (a histogram can't be rebuilt
+        # from a sliding window after the fact)
+        self.metrics = MetricsRegistry()
+        self._hist_latency = self.metrics.histogram(
+            "serve_request_latency_seconds",
+            "submission -> last-token seconds for completed requests")
+        self._hist_queue_wait = self.metrics.histogram(
+            "serve_queue_wait_seconds",
+            "submission -> slot seconds for requests that got a slot")
+        self.metrics.register_collector(self._collect_metrics)
 
     # -- update hooks (called by ContinuousScheduler) ------------------------
     def _head(self, name: str) -> Dict[str, float]:
@@ -103,10 +118,16 @@ class ServerStats:
         self.completed += 1
         self._head(head)["requests"] += 1
         self.latency.record(latency_s)
+        self._hist_latency.observe(latency_s)
         if on_time:
             self.deadline_met += 1
         else:
             self.deadline_missed += 1
+
+    def record_queue_wait(self, seconds: float) -> None:
+        """Submission -> slot wait for one request that got a slot."""
+        self.queue_wait.record(seconds)
+        self._hist_queue_wait.observe(seconds)
 
     def record_spec(self, rounds: int, draft_steps: int, drafted: int,
                     accepted: int, emitted: int, verify_queries: int,
@@ -192,13 +213,110 @@ class ServerStats:
         if stalled:
             self.pool_stalled_ticks += 1
 
+    # -- metrics mirror ------------------------------------------------------
+    #: breaker state -> serve_breaker_state gauge value
+    _BREAKER_STATE_VALUE = {"closed": 0, "half-open": 1, "open": 2}
+
+    def _collect_metrics(self) -> None:
+        """Refresh the typed-metrics registry from the live attributes —
+        the registered collector the registry runs before every
+        ``prometheus_text()`` / ``metrics.snapshot()`` exposition."""
+        m = self.metrics
+        funnel = m.counter("serve_requests_total",
+                           "admission/completion funnel events", ("event",))
+        for event, v in (("submitted", self.submitted),
+                         ("admitted", self.admitted),
+                         ("rejected", self.rejected),
+                         ("downgraded", self.downgraded),
+                         ("preempted", self.preempted),
+                         ("completed", self.completed),
+                         ("faulted", self.faulted),
+                         ("timed_out", self.timed_out)):
+            funnel.set_monotonic(v, event=event)
+        m.counter("serve_ticks_total",
+                  "scheduler ticks").set_monotonic(self.ticks)
+        m.counter("serve_tokens_total",
+                  "tokens decoded").set_monotonic(self.tokens)
+        m.gauge("serve_queue_depth",
+                "requests waiting for a slot").set(self.queue_depth)
+        deadline = m.counter("serve_deadline_total",
+                             "deadline outcomes", ("outcome",))
+        deadline.set_monotonic(self.deadline_met, outcome="met")
+        deadline.set_monotonic(self.deadline_missed, outcome="missed")
+        head_tok = m.counter("serve_head_tokens_total",
+                             "tokens decoded per head", ("head",))
+        head_req = m.counter("serve_head_requests_total",
+                             "requests completed per head", ("head",))
+        head_s = m.counter("serve_head_decode_seconds_total",
+                           "wall decode seconds per head", ("head",))
+        for name, d in self.per_head.items():
+            head_tok.set_monotonic(d["tokens"], head=name)
+            head_req.set_monotonic(d["requests"], head=name)
+            head_s.set_monotonic(d["decode_s"], head=name)
+        if self.spec_rounds:
+            spec = m.counter("serve_spec_total",
+                             "speculative-decode accounting", ("what",))
+            for what, v in (("rounds", self.spec_rounds),
+                            ("draft_steps", self.spec_draft_steps),
+                            ("drafted", self.spec_drafted),
+                            ("accepted", self.spec_accepted),
+                            ("emitted", self.spec_emitted),
+                            ("verify_queries", self.spec_verify_queries)):
+                spec.set_monotonic(v, what=what)
+        if self._resilience_touched:
+            faults = m.counter("serve_faults_total",
+                               "typed HeadFaults absorbed", ("kind",))
+            for kind, v in self.fault_kinds.items():
+                faults.set_monotonic(v, kind=kind)
+            res = m.counter("serve_resilience_total",
+                            "resilience funnel events", ("event",))
+            for event, v in (("retries", self.retries),
+                             ("fallbacks", self.fallbacks),
+                             ("watchdog_stalls", self.watchdog_stalls),
+                             ("spec_degraded", self.spec_degraded),
+                             ("breaker_trips", self.breaker_trips),
+                             ("breaker_half_opens", self.breaker_half_opens),
+                             ("breaker_closes", self.breaker_closes)):
+                res.set_monotonic(v, event=event)
+            state = m.gauge("serve_breaker_state",
+                            "0=closed, 1=half-open, 2=open", ("head",))
+            for head, st in self.breaker_states.items():
+                state.set(self._BREAKER_STATE_VALUE.get(st, -1), head=head)
+        if self.pool is not None:
+            pool = m.gauge("serve_pool_pages", "paged KV pool pages",
+                           ("what",))
+            for what in ("pages_in_use", "pages_free", "peak_pages_in_use"):
+                pool.set(float(self.pool.get(what, 0)), what=what)
+            m.counter("serve_pool_cow_copies_total",
+                      "copy-on-write page copies").set_monotonic(
+                float(self.pool.get("cow_copies", 0)))
+            m.gauge("serve_pool_hbm_resident_bytes",
+                    "HBM bytes held by resident pages").set(
+                float(self.pool.get("hbm_resident_bytes", 0)))
+            prefix = self.pool.get("prefix")
+            if isinstance(prefix, dict):
+                px = m.counter("serve_prefix_tokens_total",
+                               "radix prefix-cache prompt tokens",
+                               ("outcome",))
+                hit = float(prefix.get("tokens_hit", 0))
+                px.set_monotonic(hit, outcome="hit")
+                px.set_monotonic(
+                    max(0.0, float(prefix.get("tokens_total", 0)) - hit),
+                    outcome="miss")
+
     # -- reporting -----------------------------------------------------------
     @property
     def reject_rate(self) -> float:
         return self.rejected / self.submitted if self.submitted else math.nan
 
     def snapshot(self) -> dict:
-        """JSON-ready view — what BENCH_serving.json stores per benchmark."""
+        """JSON-ready view — what BENCH_serving.json stores per benchmark.
+
+        Every subtree is a fresh copy: callers stash snapshots, diff them
+        across ticks and serialize them later, so handing out a live
+        nested reference (the pool telemetry carries a nested ``prefix``
+        dict) would let a caller's mutation corrupt — or a later tick
+        retroactively rewrite — an already-taken snapshot."""
         per_head = {}
         for name, d in sorted(self.per_head.items()):
             s = d["decode_s"]
@@ -253,7 +371,7 @@ class ServerStats:
                     list(t) for t in self.breaker_transitions],
             },
             "pool": None if self.pool is None else {
-                **self.pool,
+                **copy.deepcopy(self.pool),
                 "stalled_ticks": self.pool_stalled_ticks,
                 "cow_copies_per_tick": (
                     self._pool_cow_total / self._pool_cow_ticks

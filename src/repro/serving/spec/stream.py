@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.request import ServeRequest
+from repro.serving.observe.trace import NULL_TRACER
 from repro.serving.resilience.faults import guard_tokens
 from repro.serving.spec.acceptance import accept_draft, greedy_accept_lengths
 from repro.serving.spec.policy import DraftLenController
@@ -167,6 +168,7 @@ class SpecDecodeStream:
         # verify boundaries guard under their OWN head names so a breaker
         # can trip the draft alone (degrade to plain decode)
         self.fault_injector = None
+        self.tracer = NULL_TRACER
         self.vocab = int(engine.W.shape[0])
         self._snapshot = _needs_snapshot(engine.model.cfg)
         self.cache = engine.model.init_cache(self.width, engine.max_len,
@@ -313,6 +315,8 @@ class SpecDecodeStream:
         tok = jnp.asarray(self.tok)
         pos = self.pos.copy()
         cache = self.cache
+        tr = self.tracer
+        draft_t0 = tr.now() if tr.enabled else 0.0
         hs, drafts, snaps = [], [], []
         for _ in range(n):
             pvec = jnp.asarray(pos)
@@ -327,6 +331,11 @@ class SpecDecodeStream:
                 snaps.append(cache)
             pos += 1
         drafts = np.stack(drafts, axis=1)                    # (W, n)
+        if tr.enabled:
+            tr.span("spec.draft", "kernel", draft_t0,
+                    args={"head": self.draft_name, "n": n,
+                          "active": len(idx)})
+        verify_t0 = tr.now() if tr.enabled else 0.0
         hs = hs + [hs[-1]] * (self.n_max - n)                # pad to n_max
         if self.sampled:
             fn = eng._spec_dist_step(self.draft_head, self.verify_head,
@@ -354,6 +363,10 @@ class SpecDecodeStream:
         else:
             guard_tokens(self.fault_injector, "verify", self.verify_name,
                          exact_ids[:n][:, idx], self.vocab)
+        if tr.enabled:
+            tr.span("spec.verify", "kernel", verify_t0,
+                    args={"head": self.verify_name, "n_max": self.n_max,
+                          "active": len(idx)})
 
         sel = np.full((self.width,), n - 1, np.int32)        # snapshot index
         round_accepted = round_emitted = 0

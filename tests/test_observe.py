@@ -1,0 +1,458 @@
+"""Observability layer: Tracer ring buffer + Chrome trace-event export,
+NullTracer no-op contract, typed Counter/Gauge/Histogram + registry
+(monotonic mirroring, label validation, Prometheus text exposition),
+ServerStats -> registry mirroring, defensive snapshot copies, request
+spans submit->retire through the scheduler (plus retry/fallback instants
+under injected faults, with zero recompiles while traced), schema-stamped
+bench JSON with loud old-schema upgrades, compiled_step_counts under
+paged / speculative / resilience step kinds, and the HLO cost-drift
+audit."""
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import L2SConfig, TrainConfig, get_config
+from repro.core import collect_contexts, fit_l2s
+from repro.data import ZipfMarkovCorpus, make_lm_batches
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw_init
+from repro.serving import (NULL_TRACER, CircuitBreaker, ContinuousScheduler,
+                           DecodeEngine, FaultInjector, LogicalClock,
+                           MetricsRegistry, NullTracer, PagePool,
+                           ServeRequest, ServeResult, StaticPolicy,
+                           TierPolicy, Tracer, audit_cost_drift)
+from repro.serving.observe.trace import SCHED_TID
+from repro.serving.scheduler import ServerStats
+
+
+class FakeClock:
+    """Deterministic monotonic clock: advances ``dt`` per read."""
+
+    def __init__(self, dt=0.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+# -- unit: Tracer -------------------------------------------------------------
+
+def test_tracer_ring_buffer_bounds_and_dropped():
+    clk = FakeClock()
+    tr = Tracer(clock=clk, capacity=4)
+    for i in range(6):
+        tr.instant(f"ev{i}", "test")
+    assert tr.emitted == 6 and tr.dropped == 2
+    assert [e["name"] for e in tr.events()] == ["ev2", "ev3", "ev4", "ev5"]
+    tr.clear()
+    assert tr.emitted == 0 and tr.events() == []
+
+
+def test_tracer_chrome_trace_shape_and_export(tmp_path):
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    clk.t = 1.0
+    tr.instant("submit", "request", tid=7, args={"tier": "realtime"})
+    tr.span("request", "request", 1.0, 3.5, tid=7, args={"outcome": "ok"})
+    tr.span("tick", "scheduler", 0.5, 2.0)          # scheduler lane
+    doc = tr.chrome_trace()
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    # µs scaling, per-request lanes, labeled threads
+    span = next(e for e in evs if e["name"] == "request")
+    assert span["ts"] == pytest.approx(1.0e6)
+    assert span["dur"] == pytest.approx(2.5e6)
+    assert span["tid"] == 7 and span["pid"] == 1
+    assert span["args"]["outcome"] == "ok"
+    names = {m["tid"]: m["args"]["name"] for m in meta}
+    assert names[SCHED_TID] == "scheduler" and names[7] == "request 7"
+    assert doc["otherData"] == {"emitted": 3, "dropped": 0}
+    # negative durations are clamped, not exported
+    tr.span("bad", "test", 5.0, 4.0)
+    assert tr.events()[-1]["dur"] == 0.0
+    # both exports round-trip through strict JSON
+    p = tr.export_chrome(str(tmp_path / "trace.json"))
+    with open(p) as f:
+        assert json.load(f)["displayTimeUnit"] == "ms"
+    pl = tr.export_jsonl(str(tmp_path / "trace.jsonl"))
+    with open(pl) as f:
+        lines = [json.loads(ln) for ln in f]
+    assert len(lines) == 4 and all("pid" in ln for ln in lines)
+
+
+def test_null_tracer_is_inert_but_exports_empty(tmp_path):
+    assert NULL_TRACER.enabled is False
+    assert isinstance(NULL_TRACER, NullTracer)
+    NULL_TRACER.span("x", "y", 0.0)
+    NULL_TRACER.instant("x", "y")
+    assert NULL_TRACER.events() == [] and NULL_TRACER.dropped == 0
+    p = NULL_TRACER.export_chrome(str(tmp_path / "empty.json"))
+    with open(p) as f:
+        assert json.load(f)["traceEvents"] == []
+
+
+# -- unit: metrics ------------------------------------------------------------
+
+def test_counter_rejects_negative_and_regression():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", ("event",))
+    c.inc(2, event="ok")
+    c.inc(event="ok")
+    assert c.value(event="ok") == 3.0
+    with pytest.raises(ValueError):
+        c.inc(-1, event="ok")
+    c.set_monotonic(7, event="ok")
+    with pytest.raises(ValueError):                 # mirrored source ran back
+        c.set_monotonic(5, event="ok")
+    with pytest.raises(ValueError):                 # label set must match
+        c.inc(1, evnt="typo")
+    with pytest.raises(ValueError):
+        c.inc(1)
+
+
+def test_histogram_buckets_sum_count_and_exposition():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    h.observe(float("nan"))                         # dropped, not counted
+    assert h.count() == 4 and h.sum() == pytest.approx(6.05)
+    g = reg.gauge("depth")
+    g.set(3)
+    g.inc()
+    g.dec(2)
+    assert g.value() == 2.0
+    text = reg.prometheus_text()
+    assert '# TYPE lat_seconds histogram' in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 3' in text   # cumulative
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert 'lat_seconds_count 4' in text
+    assert '# TYPE depth gauge' in text and 'depth 2' in text
+
+
+def test_registry_get_or_create_and_shape_conflicts():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", labelnames=("head",))
+    assert reg.counter("x_total", labelnames=("head",)) is a
+    with pytest.raises(ValueError):                 # kind mismatch
+        reg.gauge("x_total", labelnames=("head",))
+    with pytest.raises(ValueError):                 # labelnames mismatch
+        reg.counter("x_total", labelnames=("event",))
+    with pytest.raises(ValueError):                 # empty histogram buckets
+        reg.histogram("h", buckets=())
+    assert reg.get("x_total") is a and reg.get("nope") is None
+    # collectors run before every exposition
+    calls = []
+    reg.register_collector(lambda: calls.append(1))
+    reg.prometheus_text()
+    reg.snapshot()
+    assert len(calls) == 2
+
+
+def test_server_stats_mirror_into_registry():
+    st = ServerStats()
+    st.submitted += 3
+    st.admitted += 2
+    st.rejected += 1
+    st.record_decode("exact", 5, 0.25)
+    st.record_completion("exact", latency_s=0.2, on_time=True)
+    st.record_queue_wait(0.01)
+    st.record_fault("transient", transient=True)
+    st.record_retry()
+    st.record_breaker("exact", "closed", "open")
+    snap = st.metrics.snapshot()
+    assert snap["serve_requests_total"]["values"]["event=submitted"] == 3
+    assert snap["serve_requests_total"]["values"]["event=completed"] == 1
+    assert snap["serve_head_tokens_total"]["values"]["head=exact"] == 5
+    assert snap["serve_breaker_state"]["values"]["head=exact"] == 2  # open
+    assert snap["serve_resilience_total"]["values"]["event=retries"] == 1
+    lat = snap["serve_request_latency_seconds"]["values"]["_"]
+    assert lat["count"] == 1 and lat["sum"] == pytest.approx(0.2)
+    assert st.metrics.histogram("serve_queue_wait_seconds").count() == 1
+    text = st.metrics.prometheus_text()
+    assert 'serve_requests_total{event="submitted"} 3' in text
+    assert 'serve_faults_total{kind="transient"} 1' in text
+
+
+def test_snapshot_returns_defensive_copies():
+    """Regression: snapshots are stashed and diffed across ticks, so a
+    caller mutating one (including the NESTED pool/prefix dicts, which
+    used to be live references) must never corrupt the stats or a
+    previously-taken snapshot."""
+    st = ServerStats()
+    st.record_decode("exact", 4, 0.1)
+    st.observe_pool({"pages_in_use": 2, "cow_copies": 1,
+                     "prefix": {"tokens_hit": 10, "tokens_total": 12}})
+    s1 = st.snapshot()
+    s1["per_head"]["exact"]["tokens"] = 999
+    s1["pool"]["prefix"]["tokens_hit"] = 999
+    s1["pool"]["pages_in_use"] = 999
+    s2 = st.snapshot()
+    assert s2["per_head"]["exact"]["tokens"] == 4
+    assert s2["pool"]["prefix"]["tokens_hit"] == 10
+    assert s2["pool"]["pages_in_use"] == 2
+    # and the live source was never touched either
+    assert st.pool["prefix"]["tokens_hit"] == 10
+
+
+# -- bench JSON schema stamps -------------------------------------------------
+
+def test_update_bench_json_upgrades_old_schema_loudly(tmp_path, capsys):
+    from benchmarks.common import SCHEMA_VERSION, update_bench_json
+    path = str(tmp_path / "BENCH.json")
+    # a pre-versioning (v1) file left by an older benchmark run
+    with open(path, "w") as f:
+        json.dump({"old_bench": {"tokens_per_s": 123.0}}, f)
+    update_bench_json("new_bench", {"x": 1}, path=path)
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "old_bench" in out and "schema v1" in out
+    with open(path) as f:
+        data = json.load(f)
+    old = data["old_bench"]
+    assert old["schema_version"] == SCHEMA_VERSION
+    assert old["schema_upgraded_from"] == 1
+    assert old["tokens_per_s"] == 123.0             # fields kept verbatim
+    new = data["new_bench"]
+    assert new["schema_version"] == SCHEMA_VERSION
+    assert "schema_upgraded_from" not in new
+    assert "generated_at" in new
+    # re-merging is quiet: everything already stamped at current version
+    update_bench_json("new_bench", {"x": 2}, path=path)
+    assert "WARNING" not in capsys.readouterr().out
+
+
+def test_serve_launcher_log_jsonl_requires_scheduler(capsys):
+    """--log-jsonl without --scheduler fails with exit 2 BEFORE training."""
+    from repro.launch import serve as serve_mod
+    rc = serve_mod.main(["--arch", "ptb-small-lstm", "--reduced",
+                         "--log-jsonl", "ticks.jsonl"])
+    assert rc == 2
+    out = capsys.readouterr().out
+    assert "--log-jsonl needs --scheduler" in out
+    assert "trained" not in out                     # guard beat the train loop
+
+
+# -- integration: traced scheduler --------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained():
+    """Small trained LSTM + fitted screen (the scheduler-test recipe)."""
+    cfg = get_config("ptb-small-lstm").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    corpus = ZipfMarkovCorpus(cfg.vocab_size, branching=32, seed=3)
+    tcfg = TrainConfig(lr=2e-3, total_steps=60, warmup_steps=5,
+                       remat="none", loss_chunk=None)
+    step = jax.jit(make_train_step(m, tcfg))
+    opt = adamw_init(params)
+    for batch in make_lm_batches(corpus, 60, 8, 32, seed=1):
+        params, opt, _ = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in batch.items()})
+    H, y = collect_contexts(
+        m, params, [jnp.asarray(b["tokens"])
+                    for b in make_lm_batches(corpus, 8, 8, 32, seed=9)],
+        max_vectors=2000)
+    st = fit_l2s(H, y, cfg.vocab_size,
+                 L2SConfig(num_clusters=16, budget=64, outer_iters=1,
+                           sgd_steps=50))
+    return cfg, m, params, corpus, st
+
+
+def _engine(trained, max_len=36):
+    cfg, m, params, _, st = trained
+    return DecodeEngine(m, params, screen=st.screen, max_len=max_len,
+                        head_kwargs=dict(rho=cfg.d_model,
+                                         n_top=cfg.vocab_size))
+
+
+def _by_name(tr, name):
+    return [e for e in tr.events() if e["name"] == name]
+
+
+def test_scheduler_traces_request_lifecycle(trained):
+    """Every completed request leaves one submit->retire "request" span on
+    its own lane plus submit/admit/join instants and a queue.wait span;
+    the scheduler lane carries tick spans; kernel dispatch windows are
+    spanned — and tracing itself adds ZERO compiled steps."""
+    cfg, _, _, corpus, _ = trained
+    eng = _engine(trained)
+    policy = TierPolicy({"realtime": "screened"}, default="exact")
+    reqs = [ServeRequest(prompt=p, max_new=3,
+                         latency_tier=("realtime", "standard")[i % 2])
+            for i, p in enumerate(corpus.sample_batch(4, 6, seed=31))]
+    # warmup so the traced drain is compile-free
+    ContinuousScheduler(eng, policy=policy, max_slots=2).serve(reqs)
+    counts0 = eng.compiled_step_counts()
+
+    tr = Tracer(clock=FakeClock(dt=1e-4))
+    sched = ContinuousScheduler(eng, policy=policy, max_slots=2, tracer=tr)
+    out = sched.serve(reqs)
+    assert all(isinstance(r, ServeResult) for r in out)
+    assert eng.compiled_step_counts() == counts0    # tracing is host-side
+
+    spans = _by_name(tr, "request")
+    assert len(spans) == len(reqs)                  # one terminal per request
+    assert {s["args"]["outcome"] for s in spans} == {"completed"}
+    assert {s["args"]["head"] for s in spans} == {"screened", "exact"}
+    assert all(s["dur"] > 0 and s["tid"] != SCHED_TID for s in spans)
+    per_req = {s["tid"] for s in spans}
+    assert {e["tid"] for e in _by_name(tr, "submit")} == per_req
+    assert {e["tid"] for e in _by_name(tr, "admit")} == per_req
+    assert {e["tid"] for e in _by_name(tr, "join")} == per_req
+    assert {e["tid"] for e in _by_name(tr, "queue.wait")} == per_req
+    ticks = _by_name(tr, "tick")
+    assert ticks and all(e["tid"] == SCHED_TID for e in ticks)
+    assert ticks[-1]["args"]["tick"] == sched.stats.ticks
+    kern = _by_name(tr, "kernel.step")
+    assert kern and {e["args"]["head"] for e in kern} == {"screened", "exact"}
+    # the request span COVERS its kernel work on the shared timeline
+    t0 = min(s["ts"] for s in spans)
+    assert all(k["ts"] >= t0 for k in kern)
+    # live-source gauges flow through the same registry
+    snap = sched.stats.metrics.snapshot()
+    assert snap["serve_requests_total"]["values"]["event=completed"] == 4
+
+
+def test_scheduler_traces_reject_and_fault_paths(trained):
+    """Terminal spans cover the non-happy outcomes too: an admission
+    reject retires on its own lane, and injected faults leave fault +
+    retry instants (transient) or a fallback instant (permanent) with the
+    request still completing."""
+    cfg, _, _, corpus, _ = trained
+    eng = _engine(trained)
+    p = corpus.sample_batch(3, 6, seed=37)
+    # queue_limit=0-style reject: oversize budget path via breaker-free
+    # admission is covered elsewhere; here use fault injection.
+    inj = FaultInjector(seed=0)
+    inj.arm("step", "transient", head="screened", count=2)
+    inj.arm("step", "permanent", head="svd", count=1)
+    clk = LogicalClock(0.0, dt_per_read=1e-3)
+    tr = Tracer(clock=lambda: clk.t)                # peek, don't advance
+    sched = ContinuousScheduler(
+        eng, policy=StaticPolicy("screened"), max_slots=2, clock=clk,
+        fault_injector=inj, max_retries=3, tracer=tr,
+        breaker=CircuitBreaker(failure_threshold=5, clock=clk))
+    out = sched.serve([ServeRequest(prompt=p[0], max_new=4)])
+    assert isinstance(out[0], ServeResult)
+    faults = _by_name(tr, "fault")
+    retries = _by_name(tr, "retry")
+    assert len(faults) == 2 and len(retries) == 2
+    assert all(e["args"]["kind"] == "transient" for e in faults)
+    span = _by_name(tr, "request")[0]
+    assert span["args"]["outcome"] == "completed"
+
+    clk2 = LogicalClock(0.0, dt_per_read=1e-3)
+    tr2 = Tracer(clock=lambda: clk2.t)
+    sched2 = ContinuousScheduler(
+        eng, policy=StaticPolicy("svd"), max_slots=2, clock=clk2,
+        fault_injector=inj, tracer=tr2,
+        breaker=CircuitBreaker(failure_threshold=3, cooldown_s=100.0,
+                               clock=clk2))
+    out2 = sched2.serve([ServeRequest(prompt=p[1], max_new=4)])
+    assert isinstance(out2[0], ServeResult) and out2[0].head == "exact"
+    fb = _by_name(tr2, "fallback")
+    assert fb and fb[0]["args"]["from"] == "svd"
+    assert _by_name(tr2, "request")[0]["args"]["outcome"] == "completed"
+
+
+# -- compiled_step_counts / _cache_size across step kinds ---------------------
+
+def test_compiled_step_counts_paged_kind_and_redrain_flat():
+    """Attention + PagePool traffic surfaces the "greedy-paged" step kind
+    in compiled_step_counts, _cache_size tracks distinct cache keys, and a
+    second drain through a fresh pool adds zero executables."""
+    cfg = get_config("smollm-360m").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0), dtype=jnp.float32)
+    eng = DecodeEngine(m, params, max_len=32)
+    rng = np.random.default_rng(5)
+    reqs = [ServeRequest(prompt=rng.integers(
+                0, cfg.vocab_size, 6).astype(np.int32), max_new=3)
+            for _ in range(3)]
+    pool = PagePool(64, 8)
+    out = ContinuousScheduler(eng, max_slots=2, kv_pool=pool).serve(reqs)
+    assert all(isinstance(r, ServeResult) for r in out)
+    counts = eng.compiled_step_counts()
+    assert ("exact", "greedy-paged") in counts
+    assert all(n >= 1 for n in counts.values())
+    assert eng._cache_size() >= 1
+    size0 = eng._cache_size()
+    out2 = ContinuousScheduler(eng, max_slots=2,
+                               kv_pool=PagePool(64, 8)).serve(reqs)
+    assert eng.compiled_step_counts() == counts     # zero recompiles
+    assert eng._cache_size() == size0
+    for a, b in zip(out, out2):                     # paged redrain is stable
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_compiled_step_counts_spec_verify_kind(trained):
+    """A speculative stream adds the draft's "greedy" step AND the
+    verifier's "spec-verify" step to the cache, both flat on re-drain."""
+    cfg, _, _, corpus, _ = trained
+    eng = _engine(trained)
+    from repro.serving import SpecPolicy
+    pol = SpecPolicy(drafts=("screened",), min_ratio=1.0)
+    reqs = [ServeRequest(prompt=p, max_new=4)
+            for p in corpus.sample_batch(2, 6, seed=51)]
+    out = ContinuousScheduler(eng, policy=StaticPolicy("exact"),
+                              max_slots=2, spec=pol).serve(reqs)
+    assert all(isinstance(r, ServeResult) for r in out)
+    counts = eng.compiled_step_counts()
+    assert ("exact", "spec-verify") in counts
+    assert ("screened", "greedy") in counts
+    ContinuousScheduler(eng, policy=StaticPolicy("exact"), max_slots=2,
+                        spec=pol).serve(reqs)
+    assert eng.compiled_step_counts() == counts
+
+
+def test_compiled_step_counts_flat_under_retries(trained):
+    """The resilience path reuses the identical compiled step on retry: a
+    faulted-and-retried drain adds zero executables over a clean one."""
+    cfg, _, _, corpus, _ = trained
+    eng = _engine(trained)
+    req = ServeRequest(prompt=corpus.sample_batch(1, 6, seed=53)[0],
+                       max_new=4)
+    ContinuousScheduler(eng, policy=StaticPolicy("screened"),
+                        max_slots=2).serve([req])
+    counts0 = eng.compiled_step_counts()
+    inj = FaultInjector(seed=0)
+    inj.arm("step", "transient", head="screened", count=2)
+    sched = ContinuousScheduler(
+        eng, policy=StaticPolicy("screened"), max_slots=2,
+        fault_injector=inj, max_retries=3,
+        breaker=CircuitBreaker(failure_threshold=5, clock=LogicalClock()))
+    out = sched.serve([req])
+    assert isinstance(out[0], ServeResult)
+    assert sched.stats.retries == 2
+    assert eng.compiled_step_counts() == counts0
+
+
+# -- cost-drift audit ---------------------------------------------------------
+
+def test_audit_cost_drift_measures_exact_head(trained):
+    """The drift audit compares cataloged flops/bytes against compiled-HLO
+    measurements for jittable single-mesh heads: predicted and measured
+    are both positive, the ratio is finite, wall-clock is real, and
+    unknown head names are skipped rather than fatal."""
+    eng = _engine(trained)
+    drift = audit_cost_drift(eng, ("exact", "no-such-head"),
+                             iters=5, warmup=1)
+    assert set(drift) == {"exact"}                  # unknown name skipped
+    d = drift["exact"]
+    assert d["predicted"]["flops_per_query"] > 0
+    assert d["measured"]["hlo_flops"] > 0
+    assert d["measured"]["wall_s_per_query"] > 0
+    r = d["ratio"]["flops"]
+    assert r is not None and math.isfinite(r) and r > 0
+    # the exact head is a plain matmul: HLO flops within 100x of the model
+    assert 1e-2 < r < 1e2
+    assert json.loads(json.dumps(drift))            # JSON-serializable

@@ -238,6 +238,11 @@ def test_update_bench_json_atomic_and_corruption_tolerant(tmp_path, capsys):
     update_bench_json("b", {"y": 2}, path=path)
     with open(path) as f:
         data = json.load(f)                 # strict JSON: NaN became null
+    # every section carries the schema stamp (satellite: versioned bench
+    # sections); the payload fields survive unchanged beside it
+    for sec in data.values():
+        assert sec.pop("schema_version") >= 2
+        assert "T" in sec.pop("generated_at")
     assert data == {"a": {"x": 1, "bad": None}, "b": {"y": 2}}
     # a corrupt existing file is loudly rebuilt, never crashes the merge
     with open(path, "w") as f:
@@ -245,7 +250,8 @@ def test_update_bench_json_atomic_and_corruption_tolerant(tmp_path, capsys):
     update_bench_json("c", {"z": 3}, path=path)
     assert "WARNING" in capsys.readouterr().out
     with open(path) as f:
-        assert json.load(f) == {"c": {"z": 3}}
+        got = json.load(f)
+    assert list(got) == ["c"] and got["c"]["z"] == 3
     # no temp siblings left behind
     assert os.listdir(tmp_path) == ["BENCH.json"]
 
